@@ -1,0 +1,36 @@
+"""Shared benchmark utilities: timing + CSV emission.
+
+Every benchmark prints ``name,us_per_call,derived`` CSV rows (harness
+contract) plus richer derived columns where a paper figure needs them.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+
+def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall-time per call in microseconds."""
+    for _ in range(warmup):
+        out = fn(*args)
+    _block(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        _block(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def _block(out):
+    try:
+        import jax
+        jax.block_until_ready(out)
+    except Exception:
+        pass
+
+
+def emit(name: str, us: float, derived: str = ""):
+    print(f"{name},{us:.1f},{derived}", flush=True)

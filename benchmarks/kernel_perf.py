@@ -1,0 +1,63 @@
+"""Kernel micro-benchmarks (interpret mode on CPU — correctness-scale only;
+the numbers that matter on TPU come from the dry-run roofline, but this
+keeps a timed regression harness around every kernel + its oracle)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.kernels import ops, ref
+
+
+def run():
+    key = jax.random.key(0)
+    # flash attention vs reference
+    b, s, hq, hkv, d = 1, 256, 4, 2, 64
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, s, hq, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, hkv, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, hkv, d), jnp.float32)
+    us = time_fn(lambda: ops.flash_attention(q, k, v))
+    flops = 4 * b * hq * s * s * d  # QK^T + PV
+    emit("kernel_flash_attention_interp", us, f"flops={flops:.2e}")
+
+    g = hq // hkv
+    qe = q.reshape(b, s, hkv, g, d).transpose(0, 2, 3, 1, 4).reshape(b, hq, s, d)
+    ke = jnp.repeat(k.transpose(0, 2, 1, 3), g, axis=1)
+    ve = jnp.repeat(v.transpose(0, 2, 1, 3), g, axis=1)
+    ref_fn = jax.jit(lambda a, b_, c: ref.attention_ref(a, b_, c))
+    us_ref = time_fn(ref_fn, qe, ke, ve)
+    emit("kernel_flash_attention_ref", us_ref, "")
+
+    # wkv6
+    b, t, h, kk = 1, 128, 4, 32
+    ks = jax.random.split(key, 5)
+    r = jax.random.normal(ks[0], (b, t, h, kk))
+    k2 = jax.random.normal(ks[1], (b, t, h, kk))
+    v2 = jax.random.normal(ks[2], (b, t, h, kk))
+    lw = jnp.clip(-jnp.exp(jax.random.normal(ks[3], (b, t, h, kk))), -3.5, -1e-6)
+    u = jax.random.normal(ks[4], (h, kk)) * 0.1
+    us = time_fn(lambda: ops.wkv6(r, k2, v2, lw, u, chunk=64))
+    emit("kernel_wkv6_interp", us, f"state_flops={4 * b * t * h * kk * kk:.2e}")
+    ref_fn = jax.jit(lambda *a: ref.wkv6_ref(*a)[0])
+    us_ref = time_fn(ref_fn, r, k2, v2, lw, u)
+    emit("kernel_wkv6_ref", us_ref, "")
+
+    # gram
+    m, c = 2048, 153
+    x = jax.random.normal(key, (m, c))
+    y = jax.random.normal(key, (m,))
+    us = time_fn(lambda: ops.gram(x, y))
+    emit("kernel_gram_interp", us, f"flops={2 * m * c * c:.2e}")
+    ref_fn = jax.jit(lambda a, b_: ref.gram_ref(a, b_))
+    us_ref = time_fn(ref_fn, x, y)
+    emit("kernel_gram_ref", us_ref, "")
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

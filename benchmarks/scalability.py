@@ -1,0 +1,75 @@
+"""Scalability & fault-tolerance sweep (paper §I/§VI discussion).
+
+Time-to-solution (simulated wall-clock) of FGDO-ANM vs. number of volunteer
+hosts, and degradation under increasing failure/malice rates.  The paper's
+point: the asynchronous method keeps scaling because every phase accepts any
+m results; the sequential baselines cannot use more than 2n hosts.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.anm import AnmConfig
+from repro.core.fgdo import FgdoAnmServer
+from repro.core.grid import GridConfig, VolunteerGrid
+from repro.data import sdss
+import jax.numpy as jnp
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "artifacts", "benchmarks")
+
+
+def run(out_dir=None, n_stars=8_000):
+    out_dir = out_dir or os.path.abspath(OUT)
+    os.makedirs(out_dir, exist_ok=True)
+    stripe = sdss.make_stripe("scal", n_stars=n_stars, seed=21)
+    _, f_single = sdss.make_fitness(stripe)
+    fnp = lambda p: float(f_single(jnp.asarray(p, jnp.float32)))
+    rng = np.random.default_rng(3)
+    x0 = np.clip(stripe.truth + rng.normal(0, 0.2, 8).astype(np.float32),
+                 sdss.LO, sdss.HI)
+    anm_cfg = AnmConfig(m_regression=100, m_line_search=100, max_iterations=5)
+
+    results = {"hosts_sweep": [], "fault_sweep": []}
+    for n_hosts in [16, 64, 256, 1024]:
+        server = FgdoAnmServer(x0, sdss.LO, sdss.HI, sdss.DEFAULT_STEP,
+                               anm_cfg, seed=7)
+        grid = VolunteerGrid(fnp, GridConfig(
+            n_hosts=n_hosts, failure_prob=0.05, malicious_prob=0.01, seed=9))
+        stats = grid.run(server)
+        row = {"n_hosts": n_hosts, "sim_time_s": stats.sim_time,
+               "iterations": server.iteration, "final": server.best_fitness,
+               "stale": server.stats.stale, "completed": stats.completed}
+        results["hosts_sweep"].append(row)
+        emit(f"scal_hosts_{n_hosts}", stats.sim_time * 1e6,
+             f"final={server.best_fitness:.5f};sim_s={stats.sim_time:.0f}")
+
+    for fail, mal in [(0.0, 0.0), (0.1, 0.02), (0.3, 0.05), (0.5, 0.10)]:
+        server = FgdoAnmServer(x0, sdss.LO, sdss.HI, sdss.DEFAULT_STEP,
+                               anm_cfg, seed=7)
+        grid = VolunteerGrid(fnp, GridConfig(
+            n_hosts=128, failure_prob=fail, malicious_prob=mal, seed=13))
+        stats = grid.run(server)
+        row = {"failure_prob": fail, "malicious_prob": mal,
+               "sim_time_s": stats.sim_time, "final": server.best_fitness,
+               "validations_failed": server.stats.validations_failed,
+               "corrupted_injected": stats.corrupted}
+        results["fault_sweep"].append(row)
+        emit(f"scal_fault_{int(fail * 100)}pct", stats.sim_time * 1e6,
+             f"final={server.best_fitness:.5f};"
+             f"val_rejects={server.stats.validations_failed}")
+
+    with open(os.path.join(out_dir, "scalability.json"), "w") as f:
+        json.dump(results, f, indent=2)
+    return results
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

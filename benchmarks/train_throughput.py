@@ -1,0 +1,61 @@
+"""LM training-step micro-benchmark on CPU (smoke scale) — regression guard
+for the training substrate, plus the paper-technique overhead measurement:
+AdamW step vs AdamW + randomized parallel line search vs subspace Newton."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.configs import get_smoke_config
+from repro.core import subspace_newton as subn
+from repro.core.parallel_line_search import LineSearchConfig, randomized_line_search
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models import init_params, make_loss_fn, make_train_step
+from repro.optim.adamw import AdamW
+
+
+def run():
+    cfg = get_smoke_config("qwen2-72b")
+    params = init_params(cfg, jax.random.key(0))
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=128,
+                                  global_batch=4, seed=0))
+    batch = {k: jnp.asarray(v) for k, v in data.batch(0).items()}
+    tokens = 4 * 128
+
+    opt = AdamW(lr=1e-3)
+    opt_state = opt.init(params)
+    step = jax.jit(make_train_step(cfg, opt))
+    us = time_fn(lambda: step(params, opt_state, batch))
+    emit("train_step_adamw", us, f"tok_per_s={tokens / (us / 1e6):.0f}")
+
+    loss_fn = make_loss_fn(cfg)
+
+    def step_ls(params, opt_state, batch, key):
+        p2, o2, m = make_train_step(cfg, opt)(params, opt_state, batch)
+        upd = jax.tree.map(lambda a, b: a.astype(jnp.float32)
+                           - b.astype(jnp.float32), p2, params)
+        p3, alpha, loss = randomized_line_search(
+            lambda p: loss_fn(p, batch)[0], params, upd, key,
+            LineSearchConfig(p=8))
+        return p3, o2, loss
+    jstep_ls = jax.jit(step_ls)
+    us_ls = time_fn(lambda: jstep_ls(params, opt_state, batch, jax.random.key(1)))
+    emit("train_step_adamw_plus_linesearch", us_ls,
+         f"overhead_x={us_ls / us:.2f}")
+
+    sn_cfg = subn.SubspaceNewtonConfig(k=4, sample_scale=0.05, p_line=8)
+    sn_state = subn.init_state(params)
+    jsn = jax.jit(lambda p, s, b, k: subn.subspace_newton_step(
+        lambda q: loss_fn(q, b)[0], p, s, sn_cfg, k))
+    us_sn = time_fn(lambda: jsn(params, sn_state, batch, jax.random.key(2)))
+    emit("train_step_subspace_newton", us_sn,
+         f"evals={sn_cfg.m_resolved() + sn_cfg.p_line};overhead_x={us_sn / us:.2f}")
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

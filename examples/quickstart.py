@@ -1,0 +1,39 @@
+"""Quickstart: the asynchronous Newton method in ~30 lines.
+
+Fits a 2-D Rosenbrock-like bowl with the paper's three ingredients:
+box-sampled regression (gradient+Hessian in ONE parallel batch), the
+damped Newton direction, and the randomized line search.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.anm import AnmConfig, anm_minimize
+
+
+def rosenbrock_batch(xs):                    # (m, 2) -> (m,)
+    x, y = xs[:, 0], xs[:, 1]
+    return (1 - x) ** 2 + 5.0 * (y - x * x) ** 2
+
+
+def main():
+    state = anm_minimize(
+        jax.jit(rosenbrock_batch),
+        x0=np.array([-1.2, 1.0]),
+        lo=np.array([-3.0, -3.0]), hi=np.array([3.0, 3.0]),
+        step=np.array([0.25, 0.25]),
+        cfg=AnmConfig(m_regression=64, m_line_search=64, max_iterations=25,
+                      alpha_max=2.0),
+        key=jax.random.key(0))
+    print(f"optimum found at {np.round(np.asarray(state.center), 4)} "
+          f"(truth: [1, 1]), fitness {state.best_fitness:.2e}")
+    for rec in state.history[:6]:
+        print(f"  iter {rec.iteration}: best={rec.best_fitness:.5f} "
+              f"avg_line={rec.avg_line_fitness:.5f}")
+    assert state.best_fitness < 1e-3
+
+
+if __name__ == "__main__":
+    main()

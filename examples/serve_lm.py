@@ -1,0 +1,20 @@
+"""Serve a small model with batched requests + continuous batching.
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch rwkv6-7b]
+"""
+import argparse
+import sys
+
+from repro.launch import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek-v2-lite-16b")
+    args = ap.parse_args()
+    return serve.main(["--arch", args.arch, "--batch", "4", "--requests", "8",
+                       "--prompt-len", "8", "--gen-len", "16"])
+
+
+if __name__ == "__main__":
+    sys.exit(main())

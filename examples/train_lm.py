@@ -1,0 +1,33 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps.
+
+Uses the full substrate — synthetic pipeline, AdamW, checkpointing — plus
+the paper's randomized parallel line search as a training feature.
+
+    PYTHONPATH=src python examples/train_lm.py              # full (slow on CPU)
+    PYTHONPATH=src python examples/train_lm.py --fast       # reduced demo
+"""
+import argparse
+import sys
+
+from repro.launch import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="tiny model / fewer steps (CI-speed demo)")
+    ap.add_argument("--steps", type=int, default=None)
+    args = ap.parse_args()
+    if args.fast:
+        argv = ["--preset", "tiny", "--steps", str(args.steps or 60),
+                "--batch", "4", "--seq", "64", "--line-search", "4",
+                "--ckpt-dir", "/tmp/repro_train_lm_fast", "--ckpt-every", "20"]
+    else:
+        argv = ["--preset", "lm-100m", "--steps", str(args.steps or 200),
+                "--batch", "4", "--seq", "256", "--lr", "1e-3",
+                "--ckpt-dir", "/tmp/repro_train_lm", "--ckpt-every", "50"]
+    return train.main(argv)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

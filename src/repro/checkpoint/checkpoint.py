@@ -1,0 +1,146 @@
+"""Checkpoint/restart substrate: npz bundles + manifest, atomic writes,
+retention, optional async save, and resharding on restore (elastic scaling).
+
+Layout:
+    <dir>/step_000123/arrays.npz      # one entry per pytree leaf (path-keyed)
+    <dir>/step_000123/MANIFEST.json   # step, leaf paths/dtypes/shapes, extras
+    <dir>/LATEST                      # atomic pointer file
+
+Restoring onto a different mesh is supported by passing target shardings:
+leaves are device_put with the new NamedSharding — this is how a 256-chip
+checkpoint restarts on 512 chips (elastic scale-up) and vice versa.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import ml_dtypes
+import numpy as np
+
+# npz cannot serialize ml_dtypes (bfloat16, fp8) — store bitwise views
+_RAW_VIEW = {
+    "bfloat16": np.uint16,
+    "float8_e4m3fn": np.uint8,
+    "float8_e5m2": np.uint8,
+}
+_RAW_BACK = {"bfloat16": ml_dtypes.bfloat16,
+             "float8_e4m3fn": ml_dtypes.float8_e4m3fn,
+             "float8_e5m2": ml_dtypes.float8_e5m2}
+
+
+def _encode(a: np.ndarray) -> np.ndarray:
+    view = _RAW_VIEW.get(a.dtype.name)
+    return a.view(view) if view is not None else a
+
+
+def _decode(arr: np.ndarray, want_dtype) -> np.ndarray:
+    name = np.dtype(want_dtype).name if not hasattr(want_dtype, "name") else want_dtype.name
+    if name in _RAW_BACK and arr.dtype == _RAW_VIEW[name]:
+        return arr.view(_RAW_BACK[name])       # bitwise-exact restore
+    if str(arr.dtype) != str(want_dtype):
+        return arr.astype(want_dtype)
+    return arr
+
+
+def _flatten_with_paths(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def save(ckpt_dir: str, step: int, tree, extras: Optional[Dict] = None,
+         keep: int = 3, async_save: bool = False):
+    """Write a checkpoint bundle. Atomic via tmp-dir + rename."""
+    flat = _flatten_with_paths(tree)
+    host = {k: _encode(np.asarray(v)) for k, v in flat.items()}
+
+    def _write():
+        name = f"step_{step:08d}"
+        tmp = os.path.join(ckpt_dir, f".tmp_{name}_{os.getpid()}")
+        os.makedirs(tmp, exist_ok=True)
+        np.savez(os.path.join(tmp, "arrays.npz"), **host)
+        manifest = {
+            "step": step,
+            "time": time.time(),
+            "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                       for k, v in host.items()},
+            "extras": extras or {},
+        }
+        with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
+            json.dump(manifest, f, indent=2)
+        final = os.path.join(ckpt_dir, name)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        latest_tmp = os.path.join(ckpt_dir, ".LATEST.tmp")
+        with open(latest_tmp, "w") as f:
+            f.write(name)
+        os.replace(latest_tmp, os.path.join(ckpt_dir, "LATEST"))
+        _retain(ckpt_dir, keep)
+
+    os.makedirs(ckpt_dir, exist_ok=True)
+    if async_save:
+        th = threading.Thread(target=_write, daemon=True)
+        th.start()
+        return th
+    _write()
+    return None
+
+
+def _retain(ckpt_dir: str, keep: int):
+    steps = sorted(d for d in os.listdir(ckpt_dir) if d.startswith("step_"))
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    try:
+        with open(os.path.join(ckpt_dir, "LATEST")) as f:
+            return int(f.read().strip().split("_")[1])
+    except (FileNotFoundError, IndexError, ValueError):
+        return None
+
+
+def restore(ckpt_dir: str, template, step: Optional[int] = None,
+            shardings=None):
+    """Restore into the structure of ``template`` (a pytree of arrays or
+    ShapeDtypeStructs).  ``shardings``: optional matching pytree of
+    NamedSharding — leaves are placed onto it (resharding / elastic restore).
+    Returns (tree, step, extras)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "MANIFEST.json")) as f:
+        manifest = json.load(f)
+    arrays = np.load(os.path.join(path, "arrays.npz"))
+
+    flat_template = _flatten_with_paths(template)
+    flat_shard = _flatten_with_paths(shardings) if shardings is not None else {}
+    missing = set(flat_template) - set(arrays.files)
+    extra = set(arrays.files) - set(flat_template)
+    if missing or extra:
+        raise ValueError(f"checkpoint/template mismatch: missing={sorted(missing)[:5]} "
+                         f"extra={sorted(extra)[:5]}")
+
+    leaves, treedef = jax.tree_util.tree_flatten(template)
+    out = []
+    for path_leaf, leaf in jax.tree_util.tree_flatten_with_path(template)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path_leaf)
+        val = _decode(arrays[key], leaf.dtype)
+        if key in flat_shard and flat_shard[key] is not None:
+            val = jax.device_put(val, flat_shard[key])
+        else:
+            val = jax.numpy.asarray(val)
+        out.append(val)
+    tree = jax.tree_util.tree_unflatten(treedef, out)
+    return tree, manifest["step"], manifest.get("extras", {})

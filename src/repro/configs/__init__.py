@@ -1,0 +1,55 @@
+"""Config registry: ``get_config(name)`` / ``get_smoke_config(name)``.
+
+Ten assigned architectures plus the paper's own 8-parameter astronomy
+optimization problem (``paper-anm``, see repro.data.sdss).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import (  # noqa: F401  (re-exported)
+    SHAPES,
+    MLAConfig,
+    ModelConfig,
+    MoEConfig,
+    ShapeConfig,
+    SSMConfig,
+    cell_is_runnable,
+)
+
+_ARCH_MODULES: Dict[str, str] = {
+    "qwen2-72b": "repro.configs.qwen2_72b",
+    "deepseek-coder-33b": "repro.configs.deepseek_coder_33b",
+    "h2o-danube-3-4b": "repro.configs.h2o_danube_3_4b",
+    "command-r-plus-104b": "repro.configs.command_r_plus_104b",
+    "chameleon-34b": "repro.configs.chameleon_34b",
+    "deepseek-v2-lite-16b": "repro.configs.deepseek_v2_lite_16b",
+    "llama4-maverick-400b-a17b": "repro.configs.llama4_maverick_400b",
+    "rwkv6-7b": "repro.configs.rwkv6_7b",
+    "zamba2-2.7b": "repro.configs.zamba2_2p7b",
+    "hubert-xlarge": "repro.configs.hubert_xlarge",
+}
+
+ARCH_NAMES: List[str] = list(_ARCH_MODULES)
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {name!r}; available: {ARCH_NAMES}")
+    return importlib.import_module(_ARCH_MODULES[name]).CONFIG
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    if name not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {name!r}; available: {ARCH_NAMES}")
+    return importlib.import_module(_ARCH_MODULES[name]).smoke()
+
+
+def runnable_cells():
+    """Yield (arch_name, shape_name, runnable, reason) for all 40 cells."""
+    for arch in ARCH_NAMES:
+        cfg = get_config(arch)
+        for shape_name, shape in SHAPES.items():
+            ok, reason = cell_is_runnable(cfg, shape)
+            yield arch, shape_name, ok, reason

@@ -1,0 +1,17 @@
+# The paper's primary contribution: the asynchronous Newton method (ANM)
+# with regression-based gradient+Hessian estimation, the randomized
+# asynchronous line search, and the FGDO work-generation/validation/
+# assimilation runtime — plus the pod-scale adaptations (subspace Newton,
+# parallel line search).
+from repro.core.anm import AnmConfig, AnmState, anm_minimize  # noqa: F401
+from repro.core.fgdo import FgdoAnmServer, WorkUnit  # noqa: F401
+from repro.core.grid import GridConfig, VolunteerGrid  # noqa: F401
+from repro.core.parallel_line_search import (  # noqa: F401
+    LineSearchConfig,
+    randomized_line_search,
+)
+from repro.core.subspace_newton import (  # noqa: F401
+    SubspaceNewtonConfig,
+    init_state,
+    subspace_newton_step,
+)

@@ -1,0 +1,57 @@
+"""Randomized parallel line search along any update direction (paper §IV,
+applied to LM training).
+
+After an optimizer proposes an update Δθ, p candidate step scales are
+evaluated concurrently (on a pod: one candidate per data-parallel slice;
+here: lax.map) and the best-loss candidate wins.  Like the paper's line
+search there are no sequential dependencies, any subset of candidate results
+suffices, and scales > 1 let training escape shallow basins.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class LineSearchConfig:
+    p: int = 8
+    alpha_min: float = 0.25
+    alpha_max: float = 2.0
+    include_unit: bool = True        # always test α=1 (plain optimizer step)
+
+
+def randomized_line_search(loss_fn: Callable, params, update_tree, key,
+                           cfg: LineSearchConfig = LineSearchConfig(),
+                           completed_mask: Optional[jax.Array] = None):
+    """Returns (best_params, best_alpha, best_loss).
+
+    loss_fn: params -> scalar (closure over the evaluation minibatch).
+    update_tree: pytree of deltas (same structure as params), i.e. the
+    optimizer step already including sign/learning rate.
+    completed_mask: optional (p,) bool — candidates that "returned"
+    (first-m-of-M straggler semantics); others are ignored.
+    """
+    r = jax.random.uniform(key, (cfg.p,))
+    alphas = cfg.alpha_min + r * (cfg.alpha_max - cfg.alpha_min)
+    if cfg.include_unit:
+        alphas = alphas.at[0].set(1.0)
+
+    def apply_alpha(alpha):
+        cand = jax.tree.map(lambda p, u: (p.astype(jnp.float32)
+                                          + alpha * u.astype(jnp.float32)).astype(p.dtype),
+                            params, update_tree)
+        return loss_fn(cand)
+
+    losses = jax.lax.map(apply_alpha, alphas)
+    if completed_mask is not None:
+        losses = jnp.where(completed_mask, losses, jnp.inf)
+    best = jnp.argmin(losses)
+    alpha_best = alphas[best]
+    best_params = jax.tree.map(lambda p, u: (p.astype(jnp.float32)
+                                             + alpha_best * u.astype(jnp.float32)).astype(p.dtype),
+                               params, update_tree)
+    return best_params, alpha_best, losses[best]

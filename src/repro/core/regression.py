@@ -1,0 +1,101 @@
+"""Regression-based gradient + Hessian estimation (paper §III, eq. 4–5).
+
+We fit the quadratic surrogate in coordinates CENTERED at x'
+    f(x' + δ) ≈ c + g·δ + ½ δᵀ H δ
+by least squares over m sampled points.  The paper's eq. (4) uses raw
+coordinates, which is numerically ill-conditioned away from the origin; the
+centered fit is the same surrogate (exact on quadratics — property-tested).
+The paper's eq. (5) flat index `2n+1+ni+j` over-counts the upper triangle;
+we use the correct triangular layout.
+
+The normal-equations product XᵀX is the compute hot spot at scale
+(m up to ~10⁵, cols = (n²+3n)/2 + 1); kernels/gram.py provides the Pallas
+TPU kernel and this module the pure-jnp path (used when m·cols is small).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def n_columns(n: int) -> int:
+    """1 (const) + n (grad) + n (diag) + n(n-1)/2 (off-diag)."""
+    return 1 + 2 * n + (n * (n - 1)) // 2
+
+
+def min_points(n: int) -> int:
+    """Minimum evaluations for the regression to be determined (paper: ≥ n²+n;
+    exact column count is smaller because H is symmetric)."""
+    return n_columns(n)
+
+
+def design_matrix(deltas: jax.Array) -> jax.Array:
+    """deltas: (m, n) points relative to the center.  Returns X (m, cols)."""
+    m, n = deltas.shape
+    iu, ju = jnp.triu_indices(n, k=1)
+    cols = [jnp.ones((m, 1), deltas.dtype), deltas, 0.5 * deltas * deltas,
+            deltas[:, iu] * deltas[:, ju]]
+    return jnp.concatenate(cols, axis=1)
+
+
+def unpack(beta: jax.Array, n: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """beta (cols,) -> (c, gradient (n,), Hessian (n,n))  [paper eq. (5)]."""
+    c = beta[0]
+    g = beta[1 : n + 1]
+    h_diag = beta[n + 1 : 2 * n + 1]
+    h_off = beta[2 * n + 1 :]
+    iu, ju = jnp.triu_indices(n, k=1)
+    H = jnp.zeros((n, n), beta.dtype)
+    H = H.at[iu, ju].set(h_off)
+    H = H + H.T
+    H = H + jnp.diag(h_diag)
+    return c, g, H
+
+
+def fit_quadratic(deltas: jax.Array, ys: jax.Array, weights: jax.Array = None,
+                  ridge: float = 1e-8):
+    """Weighted least squares via normal equations (paper eq. 4).
+
+    deltas: (m, n); ys: (m,); weights: (m,) — 0 drops a sample, which is how
+    failed/unreturned/outlier evaluations are excluded without stalling
+    (the asynchronous robustness property).
+    Returns (c, g (n,), H (n,n)).
+    """
+    m, n = deltas.shape
+    x = design_matrix(deltas.astype(jnp.float64) if deltas.dtype == jnp.float64
+                      else deltas.astype(jnp.float32))
+    y = ys.astype(x.dtype)
+    if weights is not None:
+        w = weights.astype(x.dtype)
+        xw = x * w[:, None]
+    else:
+        xw = x
+    gram = xw.T @ x                                   # (cols, cols)
+    rhs = xw.T @ y
+    # scale-aware ridge keeps the solve stable when columns differ in magnitude
+    diag = jnp.diagonal(gram)
+    lam = ridge * jnp.maximum(jnp.max(diag), 1.0)
+    beta = jnp.linalg.solve(gram + lam * jnp.eye(x.shape[1], dtype=x.dtype), rhs)
+    return unpack(beta, n)
+
+
+def mad_outlier_weights(ys: jax.Array, k: float = 8.0) -> jax.Array:
+    """Median-absolute-deviation outlier mask — drops malicious/corrupt fitness
+    values before the fit (robustness guard; see DESIGN.md §2)."""
+    finite = jnp.isfinite(ys)
+    safe = jnp.where(finite, ys, jnp.nanmedian(jnp.where(finite, ys, jnp.nan)))
+    med = jnp.median(safe)
+    mad = jnp.median(jnp.abs(safe - med)) + 1e-12
+    ok = jnp.abs(safe - med) <= k * 1.4826 * mad
+    return (finite & ok).astype(ys.dtype)
+
+
+def newton_direction(g: jax.Array, H: jax.Array, damping: float = 1e-6) -> jax.Array:
+    """d = -(H + λI)⁻¹ g  (paper eq. 3), with eigenvalue-shift damping so the
+    direction is a descent direction even for indefinite H."""
+    evals, evecs = jnp.linalg.eigh(H)
+    lam = jnp.maximum(damping, damping - jnp.min(evals))
+    inv = 1.0 / (evals + lam)
+    return -(evecs * inv[None, :]) @ (evecs.T @ g)

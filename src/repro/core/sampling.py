@@ -1,0 +1,44 @@
+"""Point sampling for ANM (paper §III box sampling and §IV eq. (6) line sampling)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_box(key, center: jax.Array, step: jax.Array, m: int) -> jax.Array:
+    """m random points uniform in the box center ± step (paper: x' ± s)."""
+    n = center.shape[0]
+    u = jax.random.uniform(key, (m, n), minval=-1.0, maxval=1.0)
+    return center[None, :] + u * step[None, :]
+
+
+def clip_alpha_range(center: jax.Array, direction: jax.Array,
+                     lo: jax.Array, hi: jax.Array,
+                     alpha_min: float, alpha_max: float) -> Tuple[jax.Array, jax.Array]:
+    """Shrink [alpha_min, alpha_max] so every x' + α d stays inside [lo, hi]
+    (paper §IV: bounds 'increased or decreased so no point along the
+    directional line could be outside the search space')."""
+    d = direction
+    safe = jnp.where(jnp.abs(d) > 1e-30, d, 1e-30)
+    t_lo = (lo - center) / safe
+    t_hi = (hi - center) / safe
+    upper = jnp.where(d > 0, t_hi, jnp.where(d < 0, t_lo, jnp.inf))
+    lower = jnp.where(d > 0, t_lo, jnp.where(d < 0, t_hi, -jnp.inf))
+    a_hi = jnp.minimum(alpha_max, jnp.min(upper))
+    a_lo = jnp.maximum(alpha_min, jnp.max(lower))
+    # degenerate (direction points straight out of the box): collapse to 0
+    a_hi = jnp.maximum(a_hi, 0.0)
+    a_lo = jnp.minimum(jnp.maximum(a_lo, 0.0), a_hi)
+    return a_lo, a_hi
+
+
+def sample_line(key, center: jax.Array, direction: jax.Array,
+                alpha_min, alpha_max, m: int) -> Tuple[jax.Array, jax.Array]:
+    """Paper eq. (6): x = x' + (α_min + r·(α_max − α_min)) d,  r ~ U[0,1).
+
+    Returns (points (m,n), alphas (m,))."""
+    r = jax.random.uniform(key, (m,))
+    alphas = alpha_min + r * (alpha_max - alpha_min)
+    return center[None, :] + alphas[:, None] * direction[None, :], alphas

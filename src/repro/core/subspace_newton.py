@@ -1,0 +1,121 @@
+"""ANM lifted to neural-network training: Newton's method in a k-dim subspace.
+
+This is the pod-mode adaptation of the paper (DESIGN.md §2): a "function
+evaluation" is a minibatch loss at θ + V·c, the m sample evaluations are
+embarrassingly parallel across data-parallel workers (any m of M suffice —
+the paper's straggler/fault tolerance, by construction), the regression of
+§III recovers the k-dim gradient+Hessian, and the randomized line search of
+§IV picks the step.
+
+The subspace basis V mixes the momentum direction, the latest gradient
+estimate and random directions, so the method degrades gracefully to
+random-subspace descent when the quadratic model is poor.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import regression, sampling
+
+
+@dataclasses.dataclass(frozen=True)
+class SubspaceNewtonConfig:
+    k: int = 8                       # subspace dimension
+    m: Optional[int] = None          # samples; default 2 * n_columns(k)
+    sample_scale: float = 0.05       # box half-width in subspace coords
+    alpha_max: float = 2.0
+    p_line: int = 16                 # line-search candidates
+    damping: float = 1e-4
+    ridge: float = 1e-6
+    momentum: float = 0.9
+
+    def m_resolved(self) -> int:
+        return self.m or 2 * regression.n_columns(self.k)
+
+
+def _ravel(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    flat = jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in leaves])
+    shapes = [(l.shape, l.dtype) for l in leaves]
+
+    def unravel(v):
+        out, off = [], 0
+        for shape, dtype in shapes:
+            size = 1
+            for s in shape:
+                size *= s
+            out.append(v[off:off + size].reshape(shape).astype(dtype))
+            off += size
+        return jax.tree.unflatten(treedef, out)
+
+    return flat, unravel
+
+
+def init_state(params):
+    flat, _ = _ravel(params)
+    return {"momentum": jnp.zeros_like(flat), "step": jnp.zeros((), jnp.int32)}
+
+
+def make_basis(key, flat_params, momentum, k: int):
+    """(k, P) orthonormal basis: momentum + random directions."""
+    n = flat_params.shape[0]
+    dirs = [momentum]
+    rnd = jax.random.normal(key, (k - 1, n))
+    basis = jnp.concatenate([momentum[None, :], rnd], axis=0)
+    # Gram-Schmidt (QR on the transpose)
+    q, _ = jnp.linalg.qr(basis.T)                   # (P, k)
+    return q.T                                      # (k, P)
+
+
+def subspace_newton_step(loss_fn: Callable, params, state,
+                         cfg: SubspaceNewtonConfig, key,
+                         completed_mask: Optional[jax.Array] = None):
+    """One ANM step in a k-dim subspace.
+
+    loss_fn: params -> scalar loss (closure over the minibatch).
+    completed_mask: optional (m,) bool — simulates which of the m sample
+    evaluations returned (first-m-of-M semantics); dropped samples get
+    weight 0 in the regression, exactly like a failed volunteer.
+    Returns (new_params, new_state, info dict).
+    """
+    k = cfg.k
+    m = cfg.m_resolved()
+    flat, unravel = _ravel(params)
+    k_basis, k_box, k_line = jax.random.split(key, 3)
+    V = make_basis(k_basis, flat, state["momentum"], k)          # (k,P)
+
+    coeffs = jax.random.uniform(k_box, (m, k), minval=-cfg.sample_scale,
+                                maxval=cfg.sample_scale)
+
+    def eval_at(c):
+        return loss_fn(unravel(flat + c @ V))
+
+    ys = jax.lax.map(eval_at, coeffs)
+    weights = None
+    if completed_mask is not None:
+        weights = completed_mask.astype(jnp.float32)
+    _, g, H = regression.fit_quadratic(coeffs, ys, weights, cfg.ridge)
+    d = regression.newton_direction(g, H, cfg.damping)           # (k,)
+
+    # randomized line search (paper §IV) over p candidates, vmapped
+    alphas = jax.random.uniform(k_line, (cfg.p_line,), minval=0.0,
+                                maxval=cfg.alpha_max)
+    cand = alphas[:, None] * d[None, :]                          # (p,k)
+    f_cand = jax.lax.map(eval_at, cand)
+    f0 = loss_fn(params)
+    best = jnp.argmin(f_cand)
+    take = f_cand[best] < f0
+    alpha_best = jnp.where(take, alphas[best], 0.0)
+
+    delta_flat = (alpha_best * d) @ V
+    new_flat = flat + delta_flat
+    new_params = unravel(new_flat)
+    mom = cfg.momentum * state["momentum"] + delta_flat
+    info = {"loss_before": f0, "loss_after": jnp.minimum(f_cand[best], f0),
+            "alpha": alpha_best, "grad_norm": jnp.linalg.norm(g)}
+    return new_params, {"momentum": mom, "step": state["step"] + 1}, info

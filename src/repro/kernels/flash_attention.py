@@ -1,0 +1,110 @@
+"""Blocked causal attention (flash-attention style) as a Pallas TPU kernel.
+
+TPU adaptation (vs. the CUDA original): the kv dimension is a sequential
+("arbitrary") grid axis — online-softmax statistics (m, l) and the output
+accumulator live in VMEM scratch that persists across kv steps; blocks are
+MXU-aligned (q/kv block 128–512, head_dim padded to a multiple of 128 by
+ops.py).  Causality skips whole kv blocks above the diagonal with pl.when.
+
+Grid: (batch*heads, n_q_blocks, n_kv_blocks)  —  last axis sequential.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                 *, scale: float, causal: bool, block_q: int, block_k: int,
+                 window: int):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q
+    k_start = kj * block_k
+    # block-level causal/window skip: process only blocks that intersect
+    # the mask (kv block not entirely in the future / not entirely out of window)
+    run = True
+    if causal:
+        run = k_start <= q_start + block_q - 1
+    if window > 0:
+        run = jnp.logical_and(run, q_start - (k_start + block_k - 1) < window)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)               # (bq, d)
+        k = k_ref[0].astype(jnp.float32)               # (bk, d)
+        v = v_ref[0].astype(jnp.float32)               # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qp = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kp = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            mask = kp <= qp
+            if window > 0:
+                mask = jnp.logical_and(mask, qp - kp < window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_cur)
+        alpha = jnp.exp(m_prev - m_cur)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = m_cur
+
+    @pl.when(kj == nk - 1)
+    def _emit():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "window", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, window: int = 0,
+                    interpret: bool = False):
+    """q,k,v: (BH, S, D) with D a multiple of 128 (ops.py pads).
+    Returns (BH, S, D)."""
+    bh, s, d = q.shape
+    t = k.shape[1]
+    assert s % block_q == 0 and t % block_k == 0, (s, t, block_q, block_k)
+    scale = 1.0 / (d ** 0.5)
+    grid = (bh, s // block_q, t // block_k)
+
+    kernel = functools.partial(_attn_kernel, scale=scale, causal=causal,
+                               block_q=block_q, block_k=block_k, window=window)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),     # running max m
+            pltpu.VMEM((block_q, 1), jnp.float32),     # running denom l
+            pltpu.VMEM((block_q, d), jnp.float32),     # output accumulator
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)

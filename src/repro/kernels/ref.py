@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each ref is the simplest possible implementation: full-materialization
+attention, an O(T) sequential scan for WKV6, and a plain matmul for the
+ANM regression Gram product.  Kernel tests sweep shapes/dtypes and
+assert_allclose against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, causal: bool = True, window: int = 0):
+    """q,k,v: (B, H, S, D) (same H — GQA expansion happens in ops.py).
+    Returns (B, H, S, D)."""
+    b, h, s, d = q.shape
+    scores = jnp.einsum("bhsd,bhtd->bhst", q, k).astype(jnp.float32) * (d ** -0.5)
+    qp = jnp.arange(s)[:, None]
+    kp = jnp.arange(k.shape[2])[None, :]
+    mask = jnp.ones((s, k.shape[2]), bool)
+    if causal:
+        mask = kp <= qp
+        if window > 0:
+            mask = mask & (qp - kp < window)
+    scores = jnp.where(mask, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhst,bhtd->bhsd", p, v)
+
+
+def wkv6_ref(r, k, v, lw, u, s0=None):
+    """Sequential RWKV6 recurrence (the semantics definition).
+
+    r,k,v,lw: (B, T, H, K); u: (H, K).  Returns (o (B,T,H,K), s (B,H,K,K)).
+      o_t = r_t · (S_{t-1} + diag(u) k_t v_tᵀ);  S_t = diag(w_t) S_{t-1} + k_t v_tᵀ
+    """
+    b, t, h, kk = r.shape
+    f32 = jnp.float32
+    r_, k_, v_, lw_ = (a.astype(f32) for a in (r, k, v, lw))
+    if s0 is None:
+        s0 = jnp.zeros((b, h, kk, kk), f32)
+
+    def step(s, inp):
+        rt, kt, vt, lwt = inp
+        kv = kt[..., :, None] * vt[..., None, :]
+        o = jnp.einsum("bhk,bhkv->bhv", rt, s + u.astype(f32)[..., :, None] * kv)
+        s_new = jnp.exp(lwt)[..., None] * s + kv
+        return s_new, o
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (r_, k_, v_, lw_))
+    s_fin, o = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(o, 0, 1).astype(r.dtype), s_fin
+
+
+def gram_ref(x, y):
+    """X: (m, c), y: (m,) -> (XᵀX (c,c) f32, Xᵀy (c,) f32)."""
+    x32 = x.astype(jnp.float32)
+    return x32.T @ x32, x32.T @ y.astype(jnp.float32)

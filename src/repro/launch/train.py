@@ -1,0 +1,181 @@
+"""End-to-end training driver.
+
+Runs reduced/"100M" configs on CPU (the same code paths pjit onto pods):
+synthetic data pipeline, AdamW (optionally int8-compressed grads with error
+feedback), checkpoint/restart (bitwise resume), and the paper's randomized
+parallel line search as a first-class training option.
+
+Examples:
+    python -m repro.launch.train --preset lm-100m --steps 200
+    python -m repro.launch.train --arch rwkv6-7b --steps 20          # smoke cfg
+    python -m repro.launch.train --preset tiny --optimizer subspace-newton
+    python -m repro.launch.train --preset tiny --steps 50 --crash-at 25 \
+        --ckpt-dir /tmp/ck && python -m repro.launch.train --preset tiny \
+        --steps 50 --ckpt-dir /tmp/ck --resume     # fault-tolerant restart
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.configs import ARCH_NAMES, get_smoke_config
+from repro.configs.base import ModelConfig
+from repro.core.parallel_line_search import LineSearchConfig, randomized_line_search
+from repro.core import subspace_newton as subn
+from repro.data.pipeline import DataConfig, SyntheticLM, SyntheticMasked
+from repro.models import (NULL_CTX, count_params, init_params, make_loss_fn,
+                          make_train_step)
+from repro.optim.adamw import AdamW
+from repro.optim.compression import compress_grads, init_error_state
+
+PRESETS = {
+    "tiny": ModelConfig(name="tiny-lm", family="dense", n_layers=2, d_model=64,
+                        n_heads=4, n_kv_heads=2, d_ff=192, vocab_size=512,
+                        head_dim=16, remat=False),
+    "lm-100m": ModelConfig(name="lm-100m", family="dense", n_layers=10,
+                           d_model=640, n_heads=10, n_kv_heads=5, d_ff=2560,
+                           vocab_size=32000, head_dim=64, remat=False),
+}
+
+
+def build_config(args) -> ModelConfig:
+    if args.preset:
+        return PRESETS[args.preset]
+    return get_smoke_config(args.arch)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=ARCH_NAMES)
+    ap.add_argument("--preset", default=None, choices=list(PRESETS))
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--optimizer", default="adamw",
+                    choices=["adamw", "subspace-newton"])
+    ap.add_argument("--compress-grads", action="store_true",
+                    help="int8 + error-feedback gradient compression")
+    ap.add_argument("--line-search", type=int, default=0,
+                    help="p>0: randomized parallel line search every step")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--crash-at", type=int, default=0,
+                    help="simulate a node failure at this step (exit 42)")
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--log-file", default=None)
+    args = ap.parse_args(argv)
+
+    if not args.preset and not args.arch:
+        args.preset = "tiny"
+    cfg = build_config(args)
+    key = jax.random.key(args.seed)
+    params = init_params(cfg, key)
+    print(f"[train] config={cfg.name} params={count_params(params):,}")
+
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                      global_batch=args.batch, seed=args.seed)
+    if cfg.frontend == "audio_stub":
+        data = SyntheticMasked(dcfg, cfg.d_model)
+    else:
+        data = SyntheticLM(dcfg)
+
+    opt = AdamW(lr=args.lr, weight_decay=0.01)
+    opt_state = opt.init(params)
+    err_state = init_error_state(params) if args.compress_grads else None
+    loss_fn = make_loss_fn(cfg)
+    start_step = 0
+
+    if args.resume and args.ckpt_dir:
+        tree = {"params": params, "opt": opt_state}
+        if err_state is not None:
+            tree["err"] = err_state
+        tree, start_step, extras = ckpt.restore(args.ckpt_dir, tree)
+        params, opt_state = tree["params"], tree["opt"]
+        err_state = tree.get("err", err_state)
+        print(f"[train] resumed from step {start_step}")
+
+    if args.optimizer == "subspace-newton":
+        sn_cfg = subn.SubspaceNewtonConfig(k=6, sample_scale=0.02)
+        sn_state = subn.init_state(params)
+
+        def sn_step(params, sn_state, batch, key):
+            return subn.subspace_newton_step(
+                lambda p: loss_fn(p, batch)[0], params, sn_state, sn_cfg, key)
+        sn_step = jax.jit(sn_step)
+
+    base_step = make_train_step(cfg, opt)
+
+    def full_step(params, opt_state, err_state, batch, key):
+        if args.compress_grads:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch)
+            grads, err_state = compress_grads(grads, err_state)
+            params_new, opt_state = opt.update(grads, opt_state, params)
+            metrics = dict(metrics, loss=loss)
+        else:
+            params_new, opt_state, metrics = base_step(params, opt_state, batch)
+        if args.line_search > 0:
+            update = jax.tree.map(lambda n, o: n.astype(jnp.float32)
+                                  - o.astype(jnp.float32), params_new, params)
+            params_new, alpha, ls_loss = randomized_line_search(
+                lambda p: loss_fn(p, batch)[0], params, update, key,
+                LineSearchConfig(p=args.line_search))
+            metrics = dict(metrics, ls_alpha=alpha, ls_loss=ls_loss)
+        return params_new, opt_state, err_state, metrics
+
+    jit_step = jax.jit(full_step)
+
+    logf = open(args.log_file, "a") if args.log_file else None
+    t0 = time.time()
+    for step in range(start_step, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in data.batch(step).items()}
+        skey = jax.random.fold_in(jax.random.key(args.seed + 7), step)
+        if args.optimizer == "subspace-newton":
+            params, sn_state, info = sn_step(params, sn_state, batch, skey)
+            metrics = {"loss": info["loss_after"], "alpha": info["alpha"]}
+        else:
+            params, opt_state, err_state, metrics = jit_step(
+                params, opt_state, err_state, batch, skey)
+        if args.crash_at and step + 1 == args.crash_at:
+            # checkpoint written for every completed multiple of ckpt_every
+            print(f"[train] simulated crash at step {step + 1}", flush=True)
+            sys.exit(42)
+        if (step + 1) % args.ckpt_every == 0 and args.ckpt_dir:
+            tree = {"params": params, "opt": opt_state}
+            if err_state is not None:
+                tree["err"] = err_state
+            ckpt.save(args.ckpt_dir, step + 1, tree,
+                      extras={"config": cfg.name})
+        if (step + 1) % args.log_every == 0 or step == args.steps - 1:
+            line = {"step": step + 1,
+                    "loss": round(float(metrics["loss"]), 5),
+                    "elapsed_s": round(time.time() - t0, 1)}
+            if "ls_alpha" in metrics:
+                line["ls_alpha"] = round(float(metrics["ls_alpha"]), 3)
+            print(f"[train] {json.dumps(line)}", flush=True)
+            if logf:
+                logf.write(json.dumps(line) + "\n")
+                logf.flush()
+    if args.ckpt_dir:
+        tree = {"params": params, "opt": opt_state}
+        if err_state is not None:
+            tree["err"] = err_state
+        ckpt.save(args.ckpt_dir, args.steps, tree, extras={"config": cfg.name})
+    print(f"[train] done in {time.time() - t0:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,23 @@
+"""Model zoo: unified transformer covering the 10 assigned architectures."""
+from repro.models.transformer import (  # noqa: F401
+    find_segments,
+    forward,
+    head_weight,
+    init_cache,
+    init_params,
+    layer_sigs,
+    make_loss_fn,
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
+    count_params,
+    ShardCtx,
+    NULL_CTX,
+)
+from repro.models.sharding import (  # noqa: F401
+    cache_specs,
+    input_specs,
+    mesh_axes,
+    param_specs,
+    to_named,
+)

@@ -1,0 +1,488 @@
+"""Core transformer layers: norms, RoPE, GQA/MLA/SWA attention, SwiGLU, MoE.
+
+Everything is a pure function over explicit parameter dicts so that pjit /
+GSPMD sharding can be annotated from the outside (see transformer.param_specs).
+Compute dtype follows the params (bf16 by default); softmax/norm statistics
+are accumulated in f32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLAConfig, ModelConfig, MoEConfig
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)).astype(dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x32 - mu), axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+def apply_norm(x: jax.Array, p: Params, cfg: ModelConfig) -> jax.Array:
+    if cfg.use_layernorm:
+        return layer_norm(x, p["scale"], p["bias"], cfg.norm_eps)
+    return rms_norm(x, p["scale"], cfg.norm_eps)
+
+
+def init_norm(key, cfg: ModelConfig, d: int, dtype) -> Params:
+    del key
+    p = {"scale": jnp.ones((d,), dtype)}
+    if cfg.use_layernorm:
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (GPT-NeoX half-split convention)
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, D); positions: (B, S) int32."""
+    half = x.shape[-1] // 2
+    inv_freq = rope_frequencies(x.shape[-1], theta)
+    angles = positions[..., None].astype(jnp.float32) * inv_freq  # (B,S,half)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# int8 cache quantization (per-position scales)
+# ---------------------------------------------------------------------------
+
+def quant_write(cache_q, cache_scale, value, idx_prefix):
+    """value: (B, 1, ...) new entry -> int8 store + f32 scale at position."""
+    v32 = value.astype(jnp.float32)
+    red_axes = tuple(range(2, v32.ndim))
+    scale = jnp.max(jnp.abs(v32), axis=red_axes, keepdims=False) / 127.0
+    scale = jnp.maximum(scale, 1e-8)                  # (B, 1)
+    q = jnp.clip(jnp.round(v32 / scale.reshape(scale.shape + (1,) * len(red_axes))),
+                 -127, 127).astype(jnp.int8)
+    cache_q = jax.lax.dynamic_update_slice(cache_q, q, idx_prefix + (0,) * len(red_axes))
+    cache_scale = jax.lax.dynamic_update_slice(cache_scale, scale, idx_prefix[:2])
+    return cache_q, cache_scale
+
+
+def dequant(cache_q, cache_scale, dtype):
+    """(B, S, ...) int8 + (B, S) scales -> dtype."""
+    extra = cache_q.ndim - 2
+    return (cache_q.astype(jnp.float32)
+            * cache_scale.reshape(cache_scale.shape + (1,) * extra)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense attention (MHA / GQA), with causal / sliding-window / bidirectional
+# masks, prefill and single-token decode with (ring-buffered) KV cache.
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig, dtype) -> Params:
+    d, hkv, hd = cfg.d_model, cfg.n_kv_heads, cfg.resolved_head_dim
+    hq = cfg.padded_heads            # pad heads are inert (masked output+grad)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    sd = d ** -0.5
+    p: Params = {
+        "wq": (jax.random.normal(k1, (d, hq, hd)) * sd).astype(dtype),
+        "wk": (jax.random.normal(k2, (d, hkv, hd)) * sd).astype(dtype),
+        "wv": (jax.random.normal(k3, (d, hkv, hd)) * sd).astype(dtype),
+        "wo": (jax.random.normal(k4, (hq, hd, d)) * (hq * hd) ** -0.5).astype(dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq, hd), dtype)
+        p["bk"] = jnp.zeros((hkv, hd), dtype)
+        p["bv"] = jnp.zeros((hkv, hd), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def head_mask(cfg: ModelConfig):
+    """(Hp,) mask — 1 for real heads, 0 for TP-alignment pad heads.  Applied
+    to attention output BEFORE wo, so pad heads contribute zero output and
+    receive zero gradient (exactly inert; published arch preserved)."""
+    if cfg.padded_heads == cfg.n_heads:
+        return None
+    return (jnp.arange(cfg.padded_heads) < cfg.n_heads)
+
+
+def _attend(q: jax.Array, k: jax.Array, v: jax.Array, mask: jax.Array) -> jax.Array:
+    """q: (B,S,H,D)  k/v: (B,T,KV,D)  mask: (B,1,1,S,T) bool -> (B,S,H,D)."""
+    b, s, h, dd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, s, kv, g, dd)
+    scores = jnp.einsum("bsngd,btnd->bngst", qg, k).astype(jnp.float32)
+    scores = scores * (dd ** -0.5)
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bngst,btnd->bsngd", probs, v)
+    return out.reshape(b, s, h, v.shape[-1])
+
+
+def _prefill_mask(cfg: ModelConfig, positions: jax.Array) -> jax.Array:
+    """(B,1,1,S,S) mask from (B,S) positions."""
+    qp = positions[:, None, None, :, None]
+    kp = positions[:, None, None, None, :]
+    if not cfg.causal:
+        return jnp.ones_like(qp == kp)
+    mask = kp <= qp
+    if cfg.sliding_window > 0:
+        mask = mask & (qp - kp < cfg.sliding_window)
+    return mask
+
+
+def attention_block(
+    x: jax.Array,
+    p: Params,
+    cfg: ModelConfig,
+    positions: jax.Array,
+    cache: Optional[Params] = None,
+    t: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Optional[Params]]:
+    """Dense GQA attention. If ``cache`` is given, performs one decode step:
+    x is (B, 1, d), ``t`` is the scalar current length; returns updated cache.
+    """
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    if cache is None:
+        mask = _prefill_mask(cfg, positions)
+        out = _attend(q, k, v, mask)
+    else:
+        window = cache["k"].shape[1]
+        idx = t % window if cfg.sliding_window > 0 else t
+        if cfg.quantized_cache:
+            ckq, cks = quant_write(cache["k"], cache["k_scale"], k, (0, idx))
+            cvq, cvs = quant_write(cache["v"], cache["v_scale"], v, (0, idx))
+            ck = dequant(ckq, cks, q.dtype)
+            cv = dequant(cvq, cvs, q.dtype)
+            cache = {"k": ckq, "v": cvq, "k_scale": cks, "v_scale": cvs}
+        else:
+            ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, idx, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, idx, 0, 0))
+            cache = {"k": ck, "v": cv}
+        valid = jnp.arange(window)[None, None, None, None, :] <= t
+        out = _attend(q, ck, cv, valid)
+    hm = head_mask(cfg)
+    if hm is not None:
+        out = out * hm[None, None, :, None].astype(out.dtype)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, cache
+
+
+def attention_cache_shape(cfg: ModelConfig, batch: int, max_seq: int):
+    """Cache held per attention layer (sliding-window archs use a ring buffer)."""
+    seq = min(max_seq, cfg.sliding_window) if cfg.sliding_window > 0 else max_seq
+    hd = cfg.resolved_head_dim
+    shapes = {"k": (batch, seq, cfg.n_kv_heads, hd),
+              "v": (batch, seq, cfg.n_kv_heads, hd)}
+    if cfg.quantized_cache:
+        shapes["k_scale"] = (batch, seq)
+        shapes["v_scale"] = (batch, seq)
+    return shapes
+
+
+# ---------------------------------------------------------------------------
+# Multi-head Latent Attention (DeepSeek-V2).  The KV cache holds only the
+# compressed latent c_kv (rank) plus the shared rope key — the paper-assigned
+# arch's memory trick.  ``absorb=True`` uses the weight-absorption decode
+# optimization (q projected into latent space; no per-step decompression).
+# ---------------------------------------------------------------------------
+
+def init_mla(key, cfg: ModelConfig, dtype) -> Params:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    keys = jax.random.split(key, 6)
+    sd = d ** -0.5
+    qd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    p = {
+        "wq": (jax.random.normal(keys[0], (d, h, qd)) * sd).astype(dtype),
+        "w_dkv": (jax.random.normal(keys[1], (d, m.kv_lora_rank)) * sd).astype(dtype),
+        "w_krope": (jax.random.normal(keys[2], (d, m.qk_rope_head_dim)) * sd).astype(dtype),
+        "w_uk": (jax.random.normal(keys[3], (m.kv_lora_rank, h, m.qk_nope_head_dim))
+                 * m.kv_lora_rank ** -0.5).astype(dtype),
+        "w_uv": (jax.random.normal(keys[4], (m.kv_lora_rank, h, m.v_head_dim))
+                 * m.kv_lora_rank ** -0.5).astype(dtype),
+        "wo": (jax.random.normal(keys[5], (h, m.v_head_dim, d))
+               * (h * m.v_head_dim) ** -0.5).astype(dtype),
+        "kv_norm": jnp.ones((m.kv_lora_rank,), dtype),
+    }
+    return p
+
+
+def mla_block(
+    x: jax.Array,
+    p: Params,
+    cfg: ModelConfig,
+    positions: jax.Array,
+    cache: Optional[Params] = None,
+    t: Optional[jax.Array] = None,
+    absorb: bool = False,
+) -> Tuple[jax.Array, Optional[Params]]:
+    m: MLAConfig = cfg.mla
+    h = cfg.n_heads
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    q_nope, q_rope = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    c_kv = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"])
+    c_kv = rms_norm(c_kv, p["kv_norm"], cfg.norm_eps)
+    k_rope = jnp.einsum("bsd,dk->bsk", x, p["w_krope"])
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+
+    if cache is None:
+        k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uk"])
+        v = jnp.einsum("bsr,rhv->bshv", c_kv, p["w_uv"])
+        k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                            (*k_rope.shape[:2], h, m.qk_rope_head_dim))], axis=-1)
+        qq = jnp.concatenate([q_nope, q_rope], axis=-1)
+        mask = _prefill_mask(cfg, positions)
+        out = _attend(qq, k, v, mask)
+        y = jnp.einsum("bshv,hvd->bsd", out, p["wo"])
+        return y, None
+
+    if cfg.quantized_cache:
+        ckq, cks = quant_write(cache["c_kv"], cache["c_kv_scale"], c_kv, (0, t))
+        crq, crs = quant_write(cache["k_rope"], cache["k_rope_scale"], k_rope, (0, t))
+        ck = dequant(ckq, cks, x.dtype)
+        cr = dequant(crq, crs, x.dtype)
+        cache = {"c_kv": ckq, "k_rope": crq, "c_kv_scale": cks, "k_rope_scale": crs}
+    else:
+        ck = jax.lax.dynamic_update_slice(cache["c_kv"], c_kv, (0, t, 0))
+        cr = jax.lax.dynamic_update_slice(cache["k_rope"], k_rope, (0, t, 0))
+        cache = {"c_kv": ck, "k_rope": cr}
+    seq = ck.shape[1]
+    valid = (jnp.arange(seq)[None, None, :] <= t)  # (1,1,T)
+    if absorb:
+        # score = q_nopeᵀ W_uk c_kv  +  q_ropeᵀ k_rope   (no decompression)
+        q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, p["w_uk"])
+        s_nope = jnp.einsum("bshr,btr->bhst", q_lat, ck)
+        s_rope = jnp.einsum("bshk,btk->bhst", q_rope, cr)
+        scores = (s_nope + s_rope).astype(jnp.float32)
+        scores = scores * ((m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5)
+        scores = jnp.where(valid[:, :, None, :], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        o_lat = jnp.einsum("bhst,btr->bshr", probs, ck)
+        out = jnp.einsum("bshr,rhv->bshv", o_lat, p["w_uv"])
+    else:
+        k_nope = jnp.einsum("btr,rhk->bthk", ck, p["w_uk"])
+        v = jnp.einsum("btr,rhv->bthv", ck, p["w_uv"])
+        k = jnp.concatenate([k_nope, jnp.broadcast_to(cr[:, :, None, :],
+                            (*cr.shape[:2], h, m.qk_rope_head_dim))], axis=-1)
+        qq = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = _attend(qq, k, v, valid[:, :, None, None, :])
+    y = jnp.einsum("bshv,hvd->bsd", out, p["wo"])
+    return y, cache
+
+
+def mla_cache_shape(cfg: ModelConfig, batch: int, max_seq: int):
+    m = cfg.mla
+    shapes = {"c_kv": (batch, max_seq, m.kv_lora_rank),
+              "k_rope": (batch, max_seq, m.qk_rope_head_dim)}
+    if cfg.quantized_cache:
+        shapes["c_kv_scale"] = (batch, max_seq)
+        shapes["k_rope_scale"] = (batch, max_seq)
+    return shapes
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP and GShard-style MoE
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d: int, ff: int, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": (jax.random.normal(k1, (d, ff)) * d ** -0.5).astype(dtype),
+        "w_in": (jax.random.normal(k2, (d, ff)) * d ** -0.5).astype(dtype),
+        "w_out": (jax.random.normal(k3, (ff, d)) * ff ** -0.5).astype(dtype),
+    }
+
+
+def mlp_block(x: jax.Array, p: Params) -> jax.Array:
+    g = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p["w_gate"]))
+    h = jnp.einsum("bsd,df->bsf", x, p["w_in"])
+    return jnp.einsum("bsf,fd->bsd", g * h, p["w_out"])
+
+
+def init_moe(key, cfg: ModelConfig, dtype) -> Params:
+    m = cfg.moe
+    d, ff, e = cfg.d_model, m.expert_d_ff, m.n_experts
+    keys = jax.random.split(key, 5)
+    p: Params = {
+        "router": (jax.random.normal(keys[0], (d, e)) * d ** -0.5).astype(jnp.float32),
+        "w_gate": (jax.random.normal(keys[1], (e, d, ff)) * d ** -0.5).astype(dtype),
+        "w_in": (jax.random.normal(keys[2], (e, d, ff)) * d ** -0.5).astype(dtype),
+        "w_out": (jax.random.normal(keys[3], (e, ff, d)) * ff ** -0.5).astype(dtype),
+    }
+    if m.n_shared_experts:
+        p["shared"] = init_mlp(keys[4], d, ff * m.n_shared_experts, dtype)
+    return p
+
+
+def moe_capacity(m: MoEConfig, tokens_per_group: int) -> int:
+    cap = int(tokens_per_group * m.experts_per_token * m.capacity_factor / m.n_experts)
+    return max(cap, 4)
+
+
+def moe_block(x: jax.Array, p: Params, cfg: ModelConfig,
+              ctx=None) -> Tuple[jax.Array, jax.Array]:
+    if cfg.moe.dispatch == "grouped":
+        return moe_block_grouped(x, p, cfg, ctx)
+    return moe_block_global(x, p, cfg)
+
+
+def moe_block_grouped(x: jax.Array, p: Params, cfg: ModelConfig,
+                      ctx=None) -> Tuple[jax.Array, jax.Array]:
+    """Per-batch-row (GShard group) sort-based dispatch.
+
+    Tokens never leave their batch row during sort/position assignment, so
+    the only cross-shard movement is buffer<->expert resharding over the
+    model axis; the combine payload is (B, S, d) instead of (tokens·k, d).
+    Capacity (and hence drops) are per group.  vmapped over the batch dim.
+    """
+    m = cfg.moe
+    b, s, d = x.shape
+    e, k = m.n_experts, m.experts_per_token
+    cap = moe_capacity(m, s)
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)            # (b,s,k)
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9, None)
+
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(jax.nn.one_hot(gate_idx[..., 0], e), axis=(0, 1))
+    aux = e * jnp.sum(me * ce)
+
+    def dispatch_group(xg, ids_g):
+        """xg: (s,d); ids: (s,k) -> buf (e,cap,d)."""
+        ids = ids_g.reshape(-1)
+        order = jnp.argsort(ids)
+        sid = ids[order]
+        src = order // k
+        counts = jax.ops.segment_sum(jnp.ones_like(sid), sid, num_segments=e)
+        starts = jnp.cumsum(counts) - counts
+        pos = jnp.arange(s * k) - starts[sid]
+        keep = pos < cap
+        pos_c = jnp.where(keep, pos, 0)
+        buf = jnp.zeros((e, cap, d), xg.dtype)
+        return buf.at[sid, pos_c].add(jnp.where(keep[:, None], xg[src], 0))
+
+    buf = jax.vmap(dispatch_group)(x, gate_idx)
+    if ctx is not None and ctx.mesh is not None:
+        # group dim over dp, expert dim over tp: resharding into the expert
+        # matmul is an all-to-all-shaped exchange, not a token all-reduce
+        buf = ctx.cons_spec(buf, ("dp", ctx.tp, None, None))
+
+    g = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, p["w_gate"]))
+    hmid = jnp.einsum("becd,edf->becf", buf, p["w_in"])
+    out_buf = jnp.einsum("becf,efd->becd", g * hmid, p["w_out"])
+
+    def combine_group(out_b, ids_g, wts_g):
+        ids = ids_g.reshape(-1)
+        order = jnp.argsort(ids)
+        sid = ids[order]
+        src = order // k
+        counts = jax.ops.segment_sum(jnp.ones_like(sid), sid, num_segments=e)
+        starts = jnp.cumsum(counts) - counts
+        pos = jnp.arange(s * k) - starts[sid]
+        keep = pos < cap
+        pos_c = jnp.where(keep, pos, 0)
+        w_sorted = wts_g.reshape(-1)[order]
+        contrib = out_b[sid, pos_c] * jnp.where(keep, w_sorted, 0.0)[:, None].astype(out_b.dtype)
+        return jnp.zeros((s, out_b.shape[-1]), out_b.dtype).at[src].add(contrib)
+
+    y = jax.vmap(combine_group)(out_buf, gate_idx, gate_vals)
+    if ctx is not None and ctx.mesh is not None:
+        y = ctx.cons(y, None, None)
+
+    if m.n_shared_experts:
+        y = y + mlp_block(x, p["shared"])
+    return y, aux
+
+
+def moe_block_global(x: jax.Array, p: Params, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """Sort-based top-k dispatch with static per-expert capacity.
+
+    Memory is O(e·cap·d) (vs. O(tokens·e·cap) for one-hot GShard dispatch):
+    token→expert assignments are sorted, each expert receives a contiguous
+    run scattered into a fixed (e, cap, d) buffer; overflow tokens are
+    dropped (capacity_factor controls drop rate).  Returns (y, aux_loss).
+    """
+    m = cfg.moe
+    b, s, d = x.shape
+    e, k = m.n_experts, m.experts_per_token
+    tokens = b * s
+    cap = moe_capacity(m, tokens)
+    xf = x.reshape(tokens, d)
+
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)            # (t,k)
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9, None)
+
+    # load-balance aux loss (Switch-style): e * Σ_e f_e · p̄_e
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(gate_idx[..., 0], e), axis=0)
+    aux = e * jnp.sum(me * ce)
+
+    ids = gate_idx.reshape(-1)                               # (t·k,)
+    wts = gate_vals.reshape(-1)
+    order = jnp.argsort(ids)                                 # stable
+    sid = ids[order]
+    src = order // k                                         # source token index
+    counts = jax.ops.segment_sum(jnp.ones_like(sid), sid, num_segments=e)
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(tokens * k) - starts[sid]
+    keep = pos < cap
+    pos_c = jnp.where(keep, pos, 0)
+
+    buf = jnp.zeros((e, cap, d), x.dtype)
+    buf = buf.at[sid, pos_c].add(jnp.where(keep[:, None], xf[src], 0))
+
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"]))
+    hmid = jnp.einsum("ecd,edf->ecf", buf, p["w_in"])
+    out_buf = jnp.einsum("ecf,efd->ecd", g * hmid, p["w_out"])
+
+    contrib = out_buf[sid, pos_c] * jnp.where(keep, wts[order], 0.0)[:, None].astype(x.dtype)
+    y = jnp.zeros((tokens, d), x.dtype).at[src].add(contrib)
+    y = y.reshape(b, s, d)
+
+    if m.n_shared_experts:
+        y = y + mlp_block(x, p["shared"])
+    return y, aux

@@ -1,0 +1,370 @@
+"""Attention-free mixers: RWKV6 "Finch" (data-dependent decay) and Mamba2.
+
+Both provide a chunked parallel form for training/prefill (matmul-dominated,
+MXU-friendly — this is the TPU adaptation of the CUDA recurrences) and an O(1)
+recurrent form for decode.  Sequential oracles live in kernels/ref.py.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+Params = Dict[str, Any]
+
+# Clamp on per-step log-decay so the factorized chunked form stays inside
+# f32 range (see DESIGN.md; fidelity impact negligible: w >= exp(-3.5)).
+# With chunk=16 and midpoint normalization, |exponent| <= 3.5*8 = 28, so the
+# masked upper-triangle products stay finite (<= e^56) in f32.
+_LOG_DECAY_MIN = -3.5
+_RWKV_CHUNK = 16
+_MAMBA_CHUNK = 64
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 time mix
+# ---------------------------------------------------------------------------
+
+def init_rwkv6(key, cfg: ModelConfig, dtype) -> Params:
+    d, ff = cfg.d_model, cfg.d_ff
+    hd = cfg.ssm.head_dim
+    h = d // hd
+    ks = jax.random.split(key, 10)
+    sd = d ** -0.5
+    lora = max(32, hd // 2)
+    return {
+        # time-mix interpolation coefficients (token shift)
+        "mu_r": jnp.full((d,), 0.5, dtype), "mu_k": jnp.full((d,), 0.5, dtype),
+        "mu_v": jnp.full((d,), 0.5, dtype), "mu_g": jnp.full((d,), 0.5, dtype),
+        "mu_w": jnp.full((d,), 0.5, dtype),
+        "w_r": (jax.random.normal(ks[0], (d, h, hd)) * sd).astype(dtype),
+        "w_k": (jax.random.normal(ks[1], (d, h, hd)) * sd).astype(dtype),
+        "w_v": (jax.random.normal(ks[2], (d, h, hd)) * sd).astype(dtype),
+        "w_g": (jax.random.normal(ks[3], (d, h, hd)) * sd).astype(dtype),
+        "w_o": (jax.random.normal(ks[4], (h, hd, d)) * sd).astype(dtype),
+        # data-dependent decay: w = exp(-exp(w0 + tanh(x A) B))
+        "w0": jnp.linspace(-6.0, -1.0, d).reshape(h, hd).astype(dtype),
+        "w_lora_a": (jax.random.normal(ks[5], (d, lora)) * sd).astype(dtype),
+        "w_lora_b": (jax.random.normal(ks[6], (lora, h, hd)) * lora ** -0.5).astype(dtype),
+        "u": (jax.random.normal(ks[7], (h, hd)) * 0.1).astype(dtype),
+        "ln_out": jnp.ones((h, hd), dtype),
+        # channel mix
+        "mu_k_cm": jnp.full((d,), 0.5, dtype), "mu_r_cm": jnp.full((d,), 0.5, dtype),
+        "w_k_cm": (jax.random.normal(ks[8], (d, ff)) * sd).astype(dtype),
+        "w_v_cm": (jax.random.normal(ks[9], (ff, d)) * ff ** -0.5).astype(dtype),
+        "w_r_cm": (jax.random.normal(ks[0], (d, d)) * sd).astype(dtype),
+    }
+
+
+def wkv6_chunked(r, k, v, lw, u, chunk: int = _RWKV_CHUNK, s0=None):
+    """Chunked-parallel WKV6 recurrence.
+
+    r,k,v: (B,T,H,K) — K = head_dim (square K==V per RWKV6).
+    lw:    (B,T,H,K) per-channel log decay (<= 0, clamped).
+    u:     (H,K) bonus.
+    s0:    optional initial state (B,H,K,K).
+    Returns (o (B,T,H,K), s_final (B,H,K,K)).
+
+    Semantics (per step): o_t = r_t·(S_{t-1} + diag(u) k_t v_tᵀ);
+    S_t = diag(w_t) S_{t-1} + k_t v_tᵀ.
+    """
+    b, t, h, kk = r.shape
+    assert t % chunk == 0, (t, chunk)
+    nc = t // chunk
+    f32 = jnp.float32
+    r_, k_, v_ = (a.astype(f32).reshape(b, nc, chunk, h, kk) for a in (r, k, v))
+    # contract: decay is clamped (see _LOG_DECAY_MIN) so factorized exps fit f32
+    lw_ = jnp.clip(lw.astype(f32), _LOG_DECAY_MIN, -1e-6)
+    lw_ = lw_.reshape(b, nc, chunk, h, kk)
+
+    L = jnp.cumsum(lw_, axis=2)                    # inclusive Σ log w within chunk
+    # midpoint normalization keeps exp() in f32 range
+    c = L[:, :, chunk // 2 : chunk // 2 + 1]
+    Lq = jnp.concatenate([jnp.zeros_like(L[:, :, :1]), L[:, :, :-1]], axis=2)  # L_{t-1}
+    rt = r_ * jnp.exp(Lq - c)                      # r̃
+    kt = k_ * jnp.exp(c - L)                       # k̃
+
+    # within-chunk token-token term: strictly lower triangular + u-diagonal
+    m = jnp.einsum("bnchk,bnshk->bnhcs", rt, kt)
+    tri = jnp.tril(jnp.ones((chunk, chunk), f32), k=-1)
+    m = m * tri
+    diag = jnp.einsum("bnchk,hk,bnchk->bnch", r_, u.astype(f32), k_)
+    o_intra = jnp.einsum("bnhcs,bnshv->bnchv", m, v_) + diag[..., None] * v_
+
+    # chunk-state contributions and inter-chunk scan:
+    #   S_end = exp(L_C)⊙S0 + Σ_τ exp(L_C - L_τ) k_τ v_τᵀ
+    decay_full = jnp.exp(L[:, :, -1])              # Π w over chunk (B,nc,H,K)
+    add = jnp.einsum("bnshk,bnshv->bnhkv", k_ * jnp.exp(L[:, :, -1:] - L), v_)
+
+    if s0 is None:
+        s0 = jnp.zeros((b, h, kk, kk), f32)
+
+    def scan_body(s, inp):
+        dec, ad, rt_n, c_n = inp
+        o_cross = jnp.einsum("bchk,bhkv->bchv", rt_n * jnp.exp(c_n), s)
+        s_new = dec[..., None] * s + ad
+        return s_new, o_cross
+
+    # reorganize per-chunk tensors for scan over nc
+    dec_s = jnp.moveaxis(decay_full, 1, 0)         # (nc,B,H,K)
+    add_s = jnp.moveaxis(add, 1, 0)                # (nc,B,H,K,V)
+    rt_s = jnp.moveaxis(rt, 1, 0)                  # (nc,B,C,H,K)
+    c_s = jnp.moveaxis(c, 1, 0)                    # (nc,B,1,H,K)
+    s_fin, o_cross = jax.lax.scan(scan_body, s0, (dec_s, add_s, rt_s, c_s))
+    o_cross = jnp.moveaxis(o_cross, 0, 1)          # (B,nc,C,H,V)
+
+    o = (o_intra + o_cross).reshape(b, t, h, kk)
+    return o.astype(r.dtype), s_fin
+
+
+def wkv6_step(r, k, v, lw, u, s):
+    """One recurrent step. r,k,v,lw: (B,H,K); s: (B,H,K,V) f32."""
+    f32 = jnp.float32
+    r_, k_, v_, lw_ = (a.astype(f32) for a in (r, k, v, lw))
+    kv = k_[..., :, None] * v_[..., None, :]               # (B,H,K,V)
+    o = jnp.einsum("bhk,bhkv->bhv", r_, s + u.astype(f32)[..., None] * kv)
+    s_new = jnp.exp(lw_)[..., None] * s + kv
+    return o.astype(r.dtype), s_new
+
+
+def rwkv6_time_mix(x, p, cfg: ModelConfig, shift_state=None, wkv_state=None):
+    """RWKV6 attention replacement.
+
+    x: (B,T,D). If states given, T must be 1 (decode step).
+    Returns (y, (new_shift, new_wkv)).
+    """
+    b, t, d = x.shape
+    hd = cfg.ssm.head_dim
+    h = d // hd
+    if shift_state is None:
+        xx = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        xx = shift_state[:, None, :]
+    delta = xx - x
+    x_r, x_k = x + delta * p["mu_r"], x + delta * p["mu_k"]
+    x_v, x_g = x + delta * p["mu_v"], x + delta * p["mu_g"]
+    x_w = x + delta * p["mu_w"]
+
+    r = jnp.einsum("btd,dhk->bthk", x_r, p["w_r"])
+    k = jnp.einsum("btd,dhk->bthk", x_k, p["w_k"])
+    v = jnp.einsum("btd,dhk->bthk", x_v, p["w_v"])
+    g = jax.nn.silu(jnp.einsum("btd,dhk->bthk", x_g, p["w_g"]))
+
+    lora = jnp.einsum("btl,lhk->bthk",
+                      jnp.tanh(jnp.einsum("btd,dl->btl", x_w, p["w_lora_a"])),
+                      p["w_lora_b"])
+    lw = -jnp.exp(jnp.clip(p["w0"].astype(jnp.float32) + lora.astype(jnp.float32),
+                           None, 1.2528))          # exp(1.2528) = 3.5
+    lw = jnp.clip(lw, _LOG_DECAY_MIN, -1e-6)
+
+    if wkv_state is None:
+        o, s_fin = wkv6_chunked(r, k, v, lw, p["u"])
+    else:
+        o1, s_fin = wkv6_step(r[:, 0], k[:, 0], v[:, 0], lw[:, 0], p["u"], wkv_state)
+        o = o1[:, None]
+
+    # per-head group norm, gate, out proj
+    o32 = o.astype(jnp.float32)
+    mu = jnp.mean(o32, axis=-1, keepdims=True)
+    var = jnp.var(o32, axis=-1, keepdims=True)
+    o = ((o32 - mu) * jax.lax.rsqrt(var + 64e-5) * p["ln_out"].astype(jnp.float32)
+         ).astype(x.dtype)
+    y = jnp.einsum("bthk,hkd->btd", o * g, p["w_o"])
+    return y, (x[:, -1, :], s_fin)
+
+
+def rwkv6_channel_mix(x, p, shift_state=None):
+    """RWKV6 FFN (relu² channel mix). Returns (y, new_shift)."""
+    if shift_state is None:
+        xx = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        xx = shift_state[:, None, :]
+    delta = xx - x
+    x_k = x + delta * p["mu_k_cm"]
+    x_r = x + delta * p["mu_r_cm"]
+    k = jnp.square(jax.nn.relu(jnp.einsum("btd,df->btf", x_k, p["w_k_cm"])))
+    kv = jnp.einsum("btf,fd->btd", k, p["w_v_cm"])
+    r = jax.nn.sigmoid(jnp.einsum("btd,de->bte", x_r, p["w_r_cm"]))
+    return r * kv, x[:, -1, :]
+
+
+def rwkv6_state_shape(cfg: ModelConfig, batch: int):
+    hd = cfg.ssm.head_dim
+    h = cfg.d_model // hd
+    return {
+        "shift_tm": (batch, cfg.d_model),
+        "shift_cm": (batch, cfg.d_model),
+        "wkv": (batch, h, hd, hd),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD)
+# ---------------------------------------------------------------------------
+
+def init_mamba2(key, cfg: ModelConfig, dtype) -> Params:
+    """The canonical fused in_proj/conv is split into z / xs / BC / dt parts so
+    TP can shard d_inner cleanly (depthwise conv is per-channel, so splitting
+    the conv is mathematically identical — see DESIGN.md)."""
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.expand * d
+    h = d_in // s.head_dim
+    bc_ch = 2 * s.n_groups * s.state_size
+    ks = jax.random.split(key, 6)
+    sd = d ** -0.5
+    return {
+        "w_z": (jax.random.normal(ks[0], (d, d_in)) * sd).astype(dtype),
+        "w_xs": (jax.random.normal(ks[1], (d, d_in)) * sd).astype(dtype),
+        "w_bc": (jax.random.normal(ks[2], (d, bc_ch)) * sd).astype(dtype),
+        "w_dt": (jax.random.normal(ks[3], (d, h)) * sd).astype(dtype),
+        "conv_w_xs": (jax.random.normal(ks[4], (s.conv_width, d_in)) * 0.2).astype(dtype),
+        "conv_b_xs": jnp.zeros((d_in,), dtype),
+        "conv_w_bc": (jax.random.normal(ks[5], (s.conv_width, bc_ch)) * 0.2).astype(dtype),
+        "conv_b_bc": jnp.zeros((bc_ch,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "dd": jnp.ones((h,), dtype),
+        "norm": jnp.ones((d_in,), dtype),
+        "out_proj": (jax.random.normal(ks[2], (d_in, d)) * d_in ** -0.5).astype(dtype),
+    }
+
+
+def _segsum(a):
+    """a: (..., C) log-decays -> (..., C, C) lower-tri decay matrix exp(Σ)."""
+    c = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    # decay from s (exclusive) to t (inclusive): cs_t - cs_s
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((c, c), bool), k=0)
+    # mask BEFORE exp: exp(+big) in the untaken branch would make grads NaN
+    return jnp.exp(jnp.where(mask, seg, -jnp.inf))
+
+
+def _causal_conv(xbc, w, b, state=None):
+    """Depthwise causal conv. xbc: (B,T,C); w: (W,C). state: (B,W-1,C)."""
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xbc.shape[0], width - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(xp[:, i : i + xbc.shape[1]] * w[i] for i in range(width))
+    new_state = xp[:, -(width - 1):]
+    return jax.nn.silu(out + b), new_state
+
+
+def mamba2_mixer(x, p, cfg: ModelConfig, state=None):
+    """Mamba2 block. x: (B,T,D). state: {"conv": (B,W-1,C), "ssm": (B,H,P,N)} for
+    decode (T==1).  Returns (y, new_state)."""
+    s = cfg.ssm
+    b, t, d = x.shape
+    d_in = s.expand * d
+    g, n, pdim = s.n_groups, s.state_size, s.head_dim
+    h = d_in // pdim
+
+    z = jnp.einsum("btd,de->bte", x, p["w_z"])
+    xs_raw = jnp.einsum("btd,de->bte", x, p["w_xs"])
+    bc_raw = jnp.einsum("btd,de->bte", x, p["w_bc"])
+    dt_raw = jnp.einsum("btd,dh->bth", x, p["w_dt"])
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,T,H)
+
+    cs_xs = None if state is None else state["conv_xs"]
+    cs_bc = None if state is None else state["conv_bc"]
+    xs_c, new_conv_xs = _causal_conv(xs_raw, p["conv_w_xs"], p["conv_b_xs"], cs_xs)
+    bc_c, new_conv_bc = _causal_conv(bc_raw, p["conv_w_bc"], p["conv_b_bc"], cs_bc)
+    xs = xs_c.reshape(b, t, h, pdim)
+    bb = bc_c[..., : g * n].reshape(b, t, g, n)
+    cc = bc_c[..., g * n :].reshape(b, t, g, n)
+    # broadcast groups over heads
+    rep = h // g
+    bb = jnp.repeat(bb, rep, axis=2)                       # (B,T,H,N)
+    cc = jnp.repeat(cc, rep, axis=2)
+
+    a = -jnp.exp(p["a_log"])                               # (H,) negative
+    la = (dt * a).astype(jnp.float32)                      # (B,T,H) log decay
+    xs32 = xs.astype(jnp.float32) * dt[..., None]          # fold dt into x
+
+    if state is None:
+        y, s_fin = _ssd_chunked(xs32, la, bb.astype(jnp.float32),
+                                cc.astype(jnp.float32))
+    else:
+        h0 = state["ssm"]
+        dec = jnp.exp(la[:, 0])                            # (B,H)
+        s_fin = dec[..., None, None] * h0 + jnp.einsum(
+            "bhp,bhn->bhpn", xs32[:, 0], bb[:, 0].astype(jnp.float32))
+        y = jnp.einsum("bhn,bhpn->bhp", cc[:, 0].astype(jnp.float32), s_fin)[:, None]
+
+    y = y + p["dd"].astype(jnp.float32)[:, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, t, d_in).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    # RMS norm before out projection
+    y32 = y.astype(jnp.float32)
+    var = jnp.mean(jnp.square(y32), axis=-1, keepdims=True)
+    y = (y32 * jax.lax.rsqrt(var + 1e-5) * p["norm"].astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bte,ed->btd", y, p["out_proj"])
+    new_state = {"conv_xs": new_conv_xs, "conv_bc": new_conv_bc, "ssm": s_fin}
+    return out, new_state
+
+
+def _ssd_chunked(xs, la, bb, cc, chunk: int = _MAMBA_CHUNK):
+    """Chunked SSD. xs: (B,T,H,P) f32 (dt folded in); la: (B,T,H) log decay;
+    bb/cc: (B,T,H,N).  Returns (y (B,T,H,P), final state (B,H,P,N))."""
+    b, t, h, pdim = xs.shape
+    n = bb.shape[-1]
+    pad = (-t) % chunk
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        la = jnp.pad(la, ((0, 0), (0, pad), (0, 0)))
+        bb = jnp.pad(bb, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cc = jnp.pad(cc, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    tt = t + pad
+    nc = tt // chunk
+    xs = xs.reshape(b, nc, chunk, h, pdim)
+    la = la.reshape(b, nc, chunk, h)
+    bb = bb.reshape(b, nc, chunk, h, n)
+    cc = cc.reshape(b, nc, chunk, h, n)
+
+    lam = jnp.moveaxis(la, 3, 2)                           # (B,nc,H,C)
+    dmat = _segsum(lam)                                    # (B,nc,H,C,C)
+    # within-chunk
+    scores = jnp.einsum("bnchk,bnshk->bnhcs", cc, bb)
+    y_diag = jnp.einsum("bnhcs,bnhcs,bnshp->bnchp", scores, dmat, xs)
+
+    # chunk-final states
+    cum = jnp.cumsum(lam, axis=-1)                         # (B,nc,H,C)
+    dec_to_end = jnp.exp(cum[..., -1:] - cum)              # (B,nc,H,C)
+    s_chunk = jnp.einsum("bnhs,bnshk,bnshp->bnhpk", dec_to_end, bb, xs)
+    dec_full = jnp.exp(cum[..., -1])                       # (B,nc,H)
+
+    def scan_body(carry, inp):
+        dec, sc, cc_n, cum_n = inp
+        y_off = jnp.einsum("bchk,bhpk,bhc->bchp", cc_n, carry, jnp.exp(cum_n))
+        new = dec[..., None, None] * carry + sc
+        return new, y_off
+
+    init = jnp.zeros((b, h, pdim, n), jnp.float32)
+    # exp(cum) decays from chunk start (exclusive) to t (inclusive):
+    cum_in = jnp.moveaxis(cum, 1, 0)                       # (nc,B,H,C)
+    s_fin, y_off = jax.lax.scan(
+        scan_body, init,
+        (jnp.moveaxis(dec_full, 1, 0), jnp.moveaxis(s_chunk, 1, 0),
+         jnp.moveaxis(cc, 1, 0), cum_in))
+    y_off = jnp.moveaxis(y_off, 0, 1)                      # (B,nc,C,H,P)
+
+    y = (y_diag + y_off).reshape(b, tt, h, pdim)
+    return y[:, :t], s_fin
+
+
+def mamba2_state_shape(cfg: ModelConfig, batch: int):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    h = d_in // s.head_dim
+    return {
+        "conv_xs": (batch, s.conv_width - 1, d_in),
+        "conv_bc": (batch, s.conv_width - 1, 2 * s.n_groups * s.state_size),
+        "ssm": (batch, h, s.head_dim, s.state_size),
+    }

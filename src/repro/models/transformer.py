@@ -1,0 +1,473 @@
+"""Unified model: one implementation covers all 10 assigned architectures.
+
+The layer stack is segmented into maximal repeating units (``find_segments``)
+so homogeneous runs are executed with ``jax.lax.scan`` over stacked params —
+this keeps HLO size and compile time bounded for 80-layer configs, and gives
+the dry-run a scan-structured program (one layer's collectives, not 80 copies).
+
+Everything is pure functions: ``init_params`` / ``forward`` / ``make_train_step``
+/ ``make_serve_step`` plus the sharding mirrors ``param_specs`` / ``cache_specs``
+/ ``input_specs`` consumed by launch/dryrun.py and launch/train.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import layers as L
+from repro.models import ssm as S
+
+Params = Dict[str, Any]
+Sig = Tuple[str, bool]  # (block kind, is_moe)
+
+
+# ---------------------------------------------------------------------------
+# Layer-stack segmentation
+# ---------------------------------------------------------------------------
+
+def layer_sigs(cfg: ModelConfig) -> List[Sig]:
+    return [(kind, cfg._layer_is_moe(i)) for i, kind in enumerate(cfg.blocks())]
+
+
+def find_segments(sigs: List[Sig]) -> List[Tuple[Tuple[Sig, ...], int]]:
+    """Greedy maximal-coverage periodic segmentation: list of (unit, repeat)."""
+    segs, i, n = [], 0, len(sigs)
+    while i < n:
+        best = None
+        for u in range(1, min(16, n - i) + 1):
+            r = 1
+            while i + u * (r + 1) <= n and sigs[i + u * r : i + u * (r + 1)] == sigs[i : i + u]:
+                r += 1
+            if r >= 2 and (best is None or u * r > best[0] * best[1]):
+                best = (u, r)
+        if best:
+            u, r = best
+            segs.append((tuple(sigs[i : i + u]), r))
+            i += u * r
+        else:
+            segs.append(((sigs[i],), 1))
+            i += 1
+    return segs
+
+
+# ---------------------------------------------------------------------------
+# Sharding context
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """Carries the mesh + axis names for activation sharding constraints.
+    ``mesh=None`` (single-device tests) disables all constraints."""
+    mesh: Any = None
+    dp: Tuple[str, ...] = ("data",)
+    tp: str = "model"
+
+    def cons(self, x, *tail):
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(self.dp, *tail)))
+
+    def cons_spec(self, x, spec_entries):
+        """Constraint with explicit entries; first entry None -> dp axes."""
+        if self.mesh is None:
+            return x
+        entries = tuple(self.dp if e == "dp" else e for e in spec_entries)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*entries)))
+
+
+NULL_CTX = ShardCtx()
+
+
+# ---------------------------------------------------------------------------
+# Per-block init / apply
+# ---------------------------------------------------------------------------
+
+def _init_block(key, sig: Sig, cfg: ModelConfig, dtype) -> Params:
+    kind, is_moe = sig
+    if kind == "shared_attn":
+        return {}  # weights live in params["shared_attn"]
+    ks = jax.random.split(key, 4)
+    p: Params = {"norm1": L.init_norm(ks[0], cfg, cfg.d_model, dtype)}
+    if kind == "attn":
+        p["attn"] = (L.init_mla(ks[1], cfg, dtype) if cfg.mla is not None
+                     else L.init_attention(ks[1], cfg, dtype))
+        if not cfg.parallel_block:
+            p["norm2"] = L.init_norm(ks[2], cfg, cfg.d_model, dtype)
+        if is_moe:
+            p["moe"] = L.init_moe(ks[3], cfg, dtype)
+        else:
+            p["mlp"] = L.init_mlp(ks[3], cfg.d_model, cfg.d_ff, dtype)
+    elif kind == "rwkv6":
+        p["norm2"] = L.init_norm(ks[2], cfg, cfg.d_model, dtype)
+        p["rwkv"] = S.init_rwkv6(ks[1], cfg, dtype)
+    elif kind == "mamba2":
+        p["mamba"] = S.init_mamba2(ks[1], cfg, dtype)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def _init_shared_block(key, cfg: ModelConfig, dtype) -> Params:
+    ks = jax.random.split(key, 4)
+    return {
+        "norm1": L.init_norm(ks[0], cfg, cfg.d_model, dtype),
+        "attn": L.init_attention(ks[1], cfg, dtype),
+        "norm2": L.init_norm(ks[2], cfg, cfg.d_model, dtype),
+        "mlp": L.init_mlp(ks[3], cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _apply_block(x, bp, sig: Sig, cfg: ModelConfig, ctx: ShardCtx, positions,
+                 cache, t, shared_p, absorb: bool = False):
+    """Returns (x, new_cache, aux_loss)."""
+    kind, is_moe = sig
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "shared_attn":
+        bp = shared_p
+    if kind in ("attn", "shared_attn"):
+        h = L.apply_norm(x, bp["norm1"], cfg)
+        if cfg.mla is not None and kind == "attn":
+            att, new_cache = L.mla_block(h, bp["attn"], cfg, positions, cache, t,
+                                         absorb=absorb)
+        else:
+            att, new_cache = L.attention_block(h, bp["attn"], cfg, positions, cache, t)
+        if cfg.pin_proj_outputs:
+            att = ctx.cons(att, None, None)
+        if cfg.parallel_block:
+            f = L.mlp_block(h, bp["mlp"])
+            if cfg.pin_proj_outputs:
+                f = ctx.cons(f, None, None)
+            x = x + att + f
+        else:
+            x = x + att
+            h2 = L.apply_norm(x, bp["norm2"], cfg)
+            if is_moe:
+                f, aux = L.moe_block(h2, bp["moe"], cfg, ctx)
+            else:
+                f = L.mlp_block(h2, bp["mlp"])
+            if cfg.pin_proj_outputs:
+                f = ctx.cons(f, None, None)
+            x = x + f
+    elif kind == "rwkv6":
+        st_tm = None if cache is None else cache["shift_tm"]
+        st_wkv = None if cache is None else cache["wkv"]
+        st_cm = None if cache is None else cache["shift_cm"]
+        h = L.apply_norm(x, bp["norm1"], cfg)
+        y, (new_tm, new_wkv) = S.rwkv6_time_mix(h, bp["rwkv"], cfg, st_tm, st_wkv)
+        x = x + y
+        h2 = L.apply_norm(x, bp["norm2"], cfg)
+        y2, new_cm = S.rwkv6_channel_mix(h2, bp["rwkv"], st_cm)
+        x = x + y2
+        new_cache = None if cache is None else {
+            "shift_tm": new_tm, "wkv": new_wkv, "shift_cm": new_cm}
+    elif kind == "mamba2":
+        h = L.apply_norm(x, bp["norm1"], cfg)
+        y, new_cache = S.mamba2_mixer(h, bp["mamba"], cfg, cache)
+        if cache is None:
+            new_cache = None
+        x = x + y
+    else:
+        raise ValueError(kind)
+    x = ctx.cons(x, None, None)
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Whole-model init / forward
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    sigs = layer_sigs(cfg)
+    segs = find_segments(sigs)
+    keys = jax.random.split(key, len(segs) + 3)
+
+    segments = []
+    for si, (unit, repeat) in enumerate(segs):
+        def init_one(k, unit=unit):
+            uks = jax.random.split(k, len(unit))
+            return [_init_block(uk, sig, cfg, dtype) for uk, sig in zip(uks, unit)]
+        if repeat == 1:
+            segments.append(init_one(keys[si]))
+        else:
+            rep_keys = jax.random.split(keys[si], repeat)
+            per = [init_one(k) for k in rep_keys]
+            segments.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per))
+
+    params: Params = {"segments": segments}
+    if cfg.frontend == "audio_stub":
+        params["embed"] = {
+            "mask_emb": (jax.random.normal(keys[-3], (cfg.d_model,)) * 0.02).astype(dtype)}
+    else:
+        params["embed"] = {
+            "tok": (jax.random.normal(keys[-3], (cfg.vocab_size, cfg.d_model))
+                    * cfg.d_model ** -0.5).astype(dtype)}
+    if any(k == "shared_attn" for k, _ in sigs):
+        params["shared_attn"] = _init_shared_block(keys[-2], cfg, dtype)
+    params["final_norm"] = L.init_norm(keys[-1], cfg, cfg.d_model, dtype)
+    if not cfg.tie_embeddings:
+        params["head"] = {
+            "w": (jax.random.normal(keys[-1], (cfg.d_model, cfg.vocab_size))
+                  * cfg.d_model ** -0.5).astype(dtype)}
+    return params
+
+
+def head_weight(params: Params, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return params["embed"]["tok"].T
+    return params["head"]["w"]
+
+
+def embed_inputs(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array]):
+    if cfg.frontend == "audio_stub":
+        x = batch["embeds"]
+        if "mask" in batch:
+            me = params["embed"]["mask_emb"].astype(x.dtype)
+            x = jnp.where(batch["mask"][..., None], me, x)
+        return x
+    return jnp.take(params["embed"]["tok"], batch["tokens"], axis=0)
+
+
+def forward(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+            ctx: ShardCtx = NULL_CTX, cache=None, t=None, absorb: bool = False,
+            unroll: bool = False):
+    """Returns (hidden, new_cache, aux). ``cache`` given => single-token decode.
+
+    ``unroll=True`` replaces lax.scan over repeated segments with a python
+    loop — used by the dry-run so cost_analysis counts every layer (XLA's
+    cost analysis visits a while body once) and every per-layer collective
+    appears in the HLO.  Numerics are identical.
+    """
+    sigs = layer_sigs(cfg)
+    segs = find_segments(sigs)
+    x = embed_inputs(params, cfg, batch)
+    x = ctx.cons(x, None, None)
+    if cache is not None:
+        b = x.shape[0]
+        positions = jnp.broadcast_to(t, (b, 1)).astype(jnp.int32)
+    else:
+        positions = batch.get("positions")
+        if positions is None:
+            positions = jnp.broadcast_to(
+                jnp.arange(x.shape[1], dtype=jnp.int32)[None], x.shape[:2])
+
+    shared_p = params.get("shared_attn")
+    aux_total = jnp.zeros((), jnp.float32)
+    new_cache = [] if cache is not None else None
+
+    if cfg.remat_policy == "dots":
+        ckpt = functools.partial(
+            jax.checkpoint,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    else:
+        ckpt = jax.checkpoint
+
+    for si, (unit, repeat) in enumerate(segs):
+        seg_p = params["segments"][si]
+        seg_c = None if cache is None else cache[si]
+
+        def unit_apply(x, unit_params, unit_cache, unit=unit):
+            aux = jnp.zeros((), jnp.float32)
+            new_uc = []
+            for ui, sig in enumerate(unit):
+                uc = None if unit_cache is None else unit_cache[ui]
+                x, nc, a = _apply_block(x, unit_params[ui], sig, cfg, ctx,
+                                        positions, uc, t, shared_p, absorb)
+                aux = aux + a
+                new_uc.append(nc)
+            return x, (new_uc if unit_cache is not None else None), aux
+
+        if repeat == 1:
+            fn = ckpt(unit_apply) if (cfg.remat and cache is None) else unit_apply
+            x, nc, a = fn(x, seg_p, seg_c)
+            aux_total = aux_total + a
+            if cache is not None:
+                new_cache.append(nc)
+        elif unroll:
+            rep_caches = []
+            for ri in range(repeat):
+                up = jax.tree.map(lambda a: a[ri], seg_p)
+                uc = None if seg_c is None else jax.tree.map(lambda a: a[ri], seg_c)
+                fn = ckpt(unit_apply) if (cfg.remat and cache is None) else unit_apply
+                x, nc, a = fn(x, up, uc)
+                aux_total = aux_total + a
+                rep_caches.append(nc)
+            if cache is not None:
+                new_cache.append(jax.tree.map(lambda *xs: jnp.stack(xs), *rep_caches))
+        else:
+            def scan_body(carry, xs_in, unit=unit):
+                x, aux = carry
+                up, uc = xs_in
+                fn = ckpt(unit_apply) if (cfg.remat and cache is None) else unit_apply
+                x, nc, a = fn(x, up, uc)
+                return (x, aux + a), nc
+            (x, aux_total), seg_nc = jax.lax.scan(
+                scan_body, (x, aux_total), (seg_p, seg_c))
+            if cache is not None:
+                new_cache.append(seg_nc)
+
+    x = L.apply_norm(x, params["final_norm"], cfg)
+    return x, new_cache, aux_total
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+def chunked_cross_entropy(hidden, w_head, labels, weights=None, chunk: int = 512):
+    """Memory-safe CE: logits are materialized one sequence-chunk at a time
+    (recomputed in backward via jax.checkpoint) — with a model-sharded vocab
+    this caps live logits at (B, chunk, V/tp) instead of (B, S, V)."""
+    b, s, d = hidden.shape
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        weights = jnp.pad(weights, ((0, 0), (0, pad))) if weights is not None else \
+            jnp.pad(jnp.ones((b, s), jnp.float32), ((0, 0), (0, pad)))
+    elif weights is None:
+        weights = jnp.ones((b, s), jnp.float32)
+    nc = hidden.shape[1] // chunk
+    hidden = hidden.reshape(b, nc, chunk, d).swapaxes(0, 1)
+    labels = labels.reshape(b, nc, chunk).swapaxes(0, 1)
+    weights = weights.reshape(b, nc, chunk).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def chunk_loss(h_c, l_c, w_c):
+        logits = jnp.einsum("bsd,dv->bsv", h_c, w_head).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, l_c[..., None], axis=-1)[..., 0]
+        return jnp.sum((lse - gold) * w_c), jnp.sum(w_c)
+
+    def body(carry, xs_in):
+        tot, cnt = carry
+        lsum, wsum = chunk_loss(*xs_in)
+        return (tot + lsum, cnt + wsum), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())),
+                                 (hidden, labels, weights))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Step factories
+# ---------------------------------------------------------------------------
+
+def make_loss_fn(cfg: ModelConfig, ctx: ShardCtx = NULL_CTX, aux_weight: float = 0.01,
+                 unroll: bool = False):
+    def loss_fn(params, batch):
+        hidden, _, aux = forward(params, cfg, batch, ctx, unroll=unroll)
+        w = head_weight(params, cfg)
+        weights = batch.get("mask")
+        if weights is not None:
+            weights = weights.astype(jnp.float32)
+        ce = chunked_cross_entropy(hidden, w, batch["labels"], weights)
+        loss = ce + aux_weight * aux
+        return loss, {"ce": ce, "aux": aux}
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, optimizer, ctx: ShardCtx = NULL_CTX,
+                    aux_weight: float = 0.01, unroll: bool = False):
+    """optimizer: repro.optim object with .update(grads, state, params)."""
+    loss_fn = make_loss_fn(cfg, ctx, aux_weight, unroll=unroll)
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        params, opt_state = optimizer.update(grads, opt_state, params)
+        metrics = dict(metrics, loss=loss)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_serve_step(cfg: ModelConfig, ctx: ShardCtx = NULL_CTX, absorb: bool = False,
+                    unroll: bool = False):
+    """One decode step: (params, cache, tokens (B,1), t ()) -> (logits, cache)."""
+
+    def serve_step(params, cache, tokens, t):
+        hidden, new_cache, _ = forward(params, cfg, {"tokens": tokens}, ctx,
+                                       cache=cache, t=t, absorb=absorb, unroll=unroll)
+        logits = jnp.einsum("bsd,dv->bsv", hidden, head_weight(params, cfg))
+        return logits, new_cache
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig, ctx: ShardCtx = NULL_CTX, unroll: bool = False):
+    """Forward pass producing logits (inference prefill / encoder forward)."""
+
+    def prefill_step(params, batch):
+        hidden, _, _ = forward(params, cfg, batch, ctx, unroll=unroll)
+        logits = jnp.einsum("bsd,dv->bsv", hidden, head_weight(params, cfg))
+        return logits
+
+    return prefill_step
+
+
+# ---------------------------------------------------------------------------
+# Cache construction
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, as_shape: bool = False):
+    """Nested cache matching forward()'s segment structure.
+    ``as_shape=True`` returns jax.ShapeDtypeStruct leaves (for dry-run)."""
+    sigs = layer_sigs(cfg)
+    segs = find_segments(sigs)
+
+    def mk(shape, dtype):
+        if as_shape:
+            return jax.ShapeDtypeStruct(shape, dtype)
+        return jnp.zeros(shape, dtype)
+
+    def block_cache(sig: Sig):
+        kind, _ = sig
+        cdtype = jnp.dtype(cfg.dtype)
+        if kind in ("attn", "shared_attn"):
+            if cfg.mla is not None and kind == "attn":
+                shapes = L.mla_cache_shape(cfg, batch, max_seq)
+            else:
+                shapes = L.attention_cache_shape(cfg, batch, max_seq)
+
+            def cache_dtype(name):
+                if name.endswith("_scale"):
+                    return jnp.float32
+                return jnp.int8 if cfg.quantized_cache else cdtype
+            return {k: mk(v, cache_dtype(k)) for k, v in shapes.items()}
+        if kind == "rwkv6":
+            shp = S.rwkv6_state_shape(cfg, batch)
+            return {"shift_tm": mk(shp["shift_tm"], cdtype),
+                    "shift_cm": mk(shp["shift_cm"], cdtype),
+                    "wkv": mk(shp["wkv"], jnp.float32)}
+        if kind == "mamba2":
+            shp = S.mamba2_state_shape(cfg, batch)
+            return {"conv_xs": mk(shp["conv_xs"], cdtype),
+                    "conv_bc": mk(shp["conv_bc"], cdtype),
+                    "ssm": mk(shp["ssm"], jnp.float32)}
+        raise ValueError(kind)
+
+    cache = []
+    for unit, repeat in segs:
+        unit_c = [block_cache(sig) for sig in unit]
+        if repeat > 1:
+            def stackit(leaf_shape):
+                if as_shape:
+                    return jax.ShapeDtypeStruct((repeat,) + leaf_shape.shape,
+                                                leaf_shape.dtype)
+                return jnp.broadcast_to(leaf_shape, (repeat,) + leaf_shape.shape).copy()
+            unit_c = jax.tree.map(stackit, unit_c)
+        cache.append(unit_c)
+    return cache
+
+
+def count_params(params: Params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))

@@ -1,0 +1,76 @@
+"""Minimal AdamW with optional ZeRO-1-style sharded moments.
+
+API (optax-like but self-contained):
+    opt = AdamW(lr=3e-4)
+    state = opt.init(params)
+    params, state = opt.update(grads, state, params)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: float = 1.0
+    # optional schedule: step -> lr multiplier
+    schedule: Optional[Callable[[jax.Array], jax.Array]] = None
+
+    def init(self, params) -> Any:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(self, grads, state, params):
+        step = state["step"] + 1
+        if self.grad_clip > 0:
+            gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                                 for g in jax.tree.leaves(grads)))
+            scale = jnp.minimum(1.0, self.grad_clip / jnp.maximum(gnorm, 1e-9))
+            grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+        lr = self.lr * (self.schedule(step) if self.schedule is not None else 1.0)
+        b1c = 1.0 - self.b1 ** step.astype(jnp.float32)
+        b2c = 1.0 - self.b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, mu, nu):
+            g32 = g.astype(jnp.float32)
+            mu = self.b1 * mu + (1 - self.b1) * g32
+            nu = self.b2 * nu + (1 - self.b2) * jnp.square(g32)
+            mhat = mu / b1c
+            nhat = nu / b2c
+            delta = mhat / (jnp.sqrt(nhat) + self.eps)
+            if self.weight_decay:
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), mu, nu
+
+        out = jax.tree.map(upd, params, grads, state["mu"], state["nu"])
+        new_params = jax.tree.map(lambda o: o[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_mu = jax.tree.map(lambda o: o[1], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+        new_nu = jax.tree.map(lambda o: o[2], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"mu": new_mu, "nu": new_nu, "step": step}
+
+
+def opt_state_specs(param_specs_tree):
+    """Optimizer-state PartitionSpec tree mirroring param specs (moments are
+    sharded exactly like their parameters)."""
+    from jax.sharding import PartitionSpec as P
+    return {
+        "mu": param_specs_tree,
+        "nu": param_specs_tree,
+        "step": P(),
+    }

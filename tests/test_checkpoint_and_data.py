@@ -1,0 +1,111 @@
+"""Checkpoint/restart, retention, resharding, and data-pipeline tests."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint as ck
+from repro.data.pipeline import DataConfig, SyntheticLM
+
+
+def _tree(key):
+    k1, k2 = jax.random.split(key)
+    return {"a": {"w": jax.random.normal(k1, (8, 4), jnp.bfloat16)},
+            "b": [jax.random.normal(k2, (3,)), jnp.int32(7)]}
+
+
+def test_roundtrip(tmp_path):
+    tree = _tree(jax.random.key(0))
+    ck.save(str(tmp_path), 5, tree, extras={"note": "x"})
+    got, step, extras = ck.restore(str(tmp_path), tree)
+    assert step == 5 and extras["note"] == "x"
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_latest_pointer_and_retention(tmp_path):
+    tree = _tree(jax.random.key(1))
+    for s in [1, 2, 3, 4, 5]:
+        ck.save(str(tmp_path), s, tree, keep=2)
+    assert ck.latest_step(str(tmp_path)) == 5
+    dirs = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert dirs == ["step_00000004", "step_00000005"]
+
+
+def test_template_mismatch_raises(tmp_path):
+    tree = _tree(jax.random.key(2))
+    ck.save(str(tmp_path), 1, tree)
+    bad = {"a": tree["a"]}
+    with pytest.raises(ValueError):
+        ck.restore(str(tmp_path), bad)
+
+
+def test_restore_with_sharding_placement(tmp_path):
+    """Elastic restore: leaves are placed onto provided shardings."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = jax.make_mesh((1,), ("data",), devices=jax.devices()[:1])
+    tree = {"w": jnp.arange(16.0).reshape(4, 4)}
+    ck.save(str(tmp_path), 3, tree)
+    sh = {"w": NamedSharding(mesh, P("data", None))}
+    got, _, _ = ck.restore(str(tmp_path), tree, shardings=sh)
+    assert got["w"].sharding == sh["w"]
+    np.testing.assert_array_equal(np.asarray(got["w"]), np.asarray(tree["w"]))
+
+
+def test_resume_is_bitwise_identical(tmp_path):
+    """Train 6 steps straight vs. 3 + checkpoint + restore + 3: identical."""
+    from repro.configs import get_smoke_config
+    from repro.models import init_params, make_train_step
+    from repro.optim.adamw import AdamW
+
+    cfg = get_smoke_config("qwen2-72b")
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                                  global_batch=2, seed=3))
+    opt = AdamW(lr=1e-3)
+    step_fn = jax.jit(make_train_step(cfg, opt))
+
+    def run(params, opt_state, lo, hi):
+        for s in range(lo, hi):
+            batch = {k: jnp.asarray(v) for k, v in data.batch(s).items()}
+            params, opt_state, _ = step_fn(params, opt_state, batch)
+        return params, opt_state
+
+    p0 = init_params(cfg, jax.random.key(0))
+    o0 = opt.init(p0)
+    p_straight, _ = run(p0, o0, 0, 6)
+
+    p3, o3 = run(p0, o0, 0, 3)
+    ck.save(str(tmp_path), 3, {"params": p3, "opt": o3})
+    restored, step, _ = ck.restore(str(tmp_path), {"params": p3, "opt": o3})
+    p_resumed, _ = run(restored["params"], restored["opt"], step, 6)
+
+    for a, b in zip(jax.tree.leaves(p_straight), jax.tree.leaves(p_resumed)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_data_determinism_and_restart_purity():
+    cfg = DataConfig(vocab_size=1000, seq_len=64, global_batch=4, seed=11)
+    d1, d2 = SyntheticLM(cfg), SyntheticLM(cfg)
+    for s in [0, 5, 117]:
+        b1, b2 = d1.batch(s), d2.batch(s)
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    # labels are next-token shifted
+    b = d1.batch(0)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_data_host_sharding_disjoint():
+    full = DataConfig(vocab_size=1000, seq_len=32, global_batch=8, seed=5)
+    h0 = SyntheticLM(DataConfig(vocab_size=1000, seq_len=32, global_batch=8,
+                                seed=5, n_hosts=2, host_id=0))
+    h1 = SyntheticLM(DataConfig(vocab_size=1000, seq_len=32, global_batch=8,
+                                seed=5, n_hosts=2, host_id=1))
+    b0, b1 = h0.batch(3), h1.batch(3)
+    assert b0["tokens"].shape == (4, 32)
+    assert not np.array_equal(b0["tokens"], b1["tokens"])

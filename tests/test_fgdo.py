@@ -1,0 +1,118 @@
+"""FGDO runtime tests: asynchrony, fault tolerance, validation, determinism."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.anm import AnmConfig
+from repro.core.fgdo import FgdoAnmServer
+from repro.core.grid import GridConfig, VolunteerGrid
+
+
+def _quad_problem(n=4, seed=0):
+    rng = np.random.default_rng(seed)
+    A = rng.normal(size=(n, n))
+    H = A @ A.T + n * np.eye(n)
+    x_opt = rng.uniform(-0.5, 0.5, n)
+
+    def f(x):
+        d = np.asarray(x, np.float64) - x_opt
+        return float(0.5 * d @ H @ d)
+
+    return f, x_opt, n
+
+
+def _run(f, n, grid_cfg, anm_cfg=None, seed=1):
+    server = FgdoAnmServer(
+        x0=np.ones(n), lo=-10 * np.ones(n), hi=10 * np.ones(n),
+        step=0.5 * np.ones(n),
+        cfg=anm_cfg or AnmConfig(m_regression=80, m_line_search=80,
+                                 max_iterations=6),
+        seed=seed)
+    grid = VolunteerGrid(f, grid_cfg)
+    grid.run(server)
+    return server, grid
+
+
+def test_converges_on_reliable_grid():
+    f, x_opt, n = _quad_problem()
+    server, _ = _run(f, n, GridConfig(n_hosts=32, failure_prob=0.0,
+                                      malicious_prob=0.0, seed=2))
+    assert server.best_fitness < 1e-2 * f(np.ones(n))
+    assert server.iteration >= 3
+
+
+def test_fault_tolerance_failures_and_malice():
+    """20% of results never return + 10% malicious hosts: still converges,
+    stale results are discarded, corrupted candidates rejected by quorum."""
+    f, x_opt, n = _quad_problem(seed=3)
+    server, grid = _run(f, n, GridConfig(n_hosts=48, failure_prob=0.2,
+                                         malicious_prob=0.1, seed=5))
+    assert server.best_fitness < 5e-2 * f(np.ones(n))
+    assert grid.stats.failed > 0
+    assert grid.stats.corrupted > 0
+    # malicious "best" line-search results must have been caught at least once
+    # (they under-report fitness by 20-80%, far outside validation rtol)
+    assert server.stats.validations_failed >= 1
+
+
+def test_determinism():
+    f, _, n = _quad_problem(seed=7)
+    cfg = GridConfig(n_hosts=24, failure_prob=0.1, malicious_prob=0.05, seed=9)
+    s1, _ = _run(f, n, cfg, seed=11)
+    s2, _ = _run(f, n, cfg, seed=11)
+    assert s1.best_fitness == s2.best_fitness
+    assert [r.best_fitness for r in s1.history] == \
+        [r.best_fitness for r in s2.history]
+    np.testing.assert_array_equal(s1.center, s2.center)
+
+
+def test_phase_advances_on_first_m_results():
+    """The server must never wait for stragglers: with heterogeneity spread
+    over 100x speeds, iterations still complete (stale > 0 proves late
+    results arrived after phase advance and were dropped, not blocking)."""
+    f, _, n = _quad_problem(seed=8)
+    server, grid = _run(f, n, GridConfig(n_hosts=64, speed_sigma=1.5,
+                                         failure_prob=0.05,
+                                         malicious_prob=0.0, seed=13))
+    assert server.done
+    assert server.stats.stale > 0
+    assert server.best_fitness < 0.1 * f(np.ones(n))
+
+
+def test_malicious_best_rejected():
+    """A malicious result that would win the line search must be caught by
+    quorum validation and the next-best candidate promoted (paper §V /
+    FGDO validation-reduction)."""
+    calls = {"n": 0}
+
+    def f(x):
+        return float(np.sum(np.asarray(x) ** 2))
+
+    server = FgdoAnmServer(x0=np.ones(2), lo=-5 * np.ones(2), hi=5 * np.ones(2),
+                           step=0.3 * np.ones(2),
+                           cfg=AnmConfig(m_regression=30, m_line_search=30,
+                                         max_iterations=1),
+                           seed=1, validation_quorum=2)
+    # drive manually: regression phase with honest results
+    now = 0.0
+    while server.phase == "regression":
+        wu = server.generate_work(0, now)
+        server.assimilate(wu, f(wu.point), 0, now)
+        now += 1
+    # line-search phase: honest results, then one lying "perfect" result
+    wus = [server.generate_work(0, now + i) for i in range(29)]
+    lie_wu = server.generate_work(0, now + 30)
+    for i, wu in enumerate(wus):
+        server.assimilate(wu, f(wu.point), 0, now + i)
+    server.assimilate(lie_wu, -1000.0, 666, now + 31)      # malicious winner
+    assert server.validating
+    # quorum re-evaluations return the TRUTH for the lying point
+    while server.validating and not server.done:
+        wu = server.generate_work(1, now)
+        if wu is None:
+            break
+        server.assimilate(wu, f(wu.point), 1, now)
+        now += 1
+    assert server.stats.validations_failed >= 1
+    # committed fitness must be a real value, not the lie
+    assert server.history[-1].best_fitness > -100.0

@@ -1,0 +1,138 @@
+"""Pallas kernel sweeps vs. the pure-jnp oracles (interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.models.ssm import wkv6_chunked, _LOG_DECAY_MIN
+
+
+def _expand_gqa(q, k, v):
+    b, s, hq, d = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qe = q.reshape(b, s, hkv, g, d).transpose(0, 2, 3, 1, 4).reshape(b, hq, s, d)
+    ke = jnp.repeat(k.transpose(0, 2, 1, 3), g, axis=1)
+    ve = jnp.repeat(v.transpose(0, 2, 1, 3), g, axis=1)
+    return qe, ke, ve
+
+
+def _unexpand(o, b, s, hq, d):
+    return o.reshape(b, hq, s, d).transpose(0, 2, 1, 3)
+
+
+@pytest.mark.parametrize("b,s,hq,hkv,d", [
+    (2, 256, 4, 2, 64),
+    (1, 128, 8, 8, 128),
+    (2, 256, 6, 2, 120),     # non-MXU-aligned head dim (danube) -> padded
+    (1, 512, 2, 1, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(b, s, hq, hkv, d, dtype):
+    ks = jax.random.split(jax.random.key(b * s + hq + d), 3)
+    q = jax.random.normal(ks[0], (b, s, hq, d), dtype)
+    k = jax.random.normal(ks[1], (b, s, hkv, d), dtype)
+    v = jax.random.normal(ks[2], (b, s, hkv, d), dtype)
+    out = ops.flash_attention(q, k, v, causal=True)
+    qe, ke, ve = _expand_gqa(q, k, v)
+    want = _unexpand(ref.attention_ref(qe, ke, ve, causal=True), b, s, hq, d)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("window", [16, 64])
+def test_flash_attention_sliding_window(window):
+    b, s, hq, hkv, d = 2, 256, 4, 2, 64
+    ks = jax.random.split(jax.random.key(window), 3)
+    q = jax.random.normal(ks[0], (b, s, hq, d))
+    k = jax.random.normal(ks[1], (b, s, hkv, d))
+    v = jax.random.normal(ks[2], (b, s, hkv, d))
+    out = ops.flash_attention(q, k, v, causal=True, window=window)
+    qe, ke, ve = _expand_gqa(q, k, v)
+    want = _unexpand(ref.attention_ref(qe, ke, ve, causal=True, window=window),
+                     b, s, hq, d)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_noncausal():
+    b, s, h, d = 1, 128, 4, 64
+    ks = jax.random.split(jax.random.key(9), 3)
+    q, k, v = (jax.random.normal(ks[i], (b, s, h, d)) for i in range(3))
+    out = ops.flash_attention(q, k, v, causal=False)
+    qe, ke, ve = _expand_gqa(q, k, v)
+    want = _unexpand(ref.attention_ref(qe, ke, ve, causal=False), b, s, h, d)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("b,t,h,kk", [(2, 64, 2, 16), (1, 128, 4, 32),
+                                      (2, 96, 3, 8)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_wkv6_kernel_sweep(b, t, h, kk, dtype):
+    ks = jax.random.split(jax.random.key(t * h + kk), 5)
+    r = jax.random.normal(ks[0], (b, t, h, kk), dtype)
+    k = jax.random.normal(ks[1], (b, t, h, kk), dtype)
+    v = jax.random.normal(ks[2], (b, t, h, kk), dtype)
+    lw = jnp.clip(-jnp.exp(jax.random.normal(ks[3], (b, t, h, kk))),
+                  _LOG_DECAY_MIN, -1e-6).astype(dtype)
+    u = (jax.random.normal(ks[4], (h, kk)) * 0.1).astype(dtype)
+    got = ops.wkv6(r, k, v, lw, u, chunk=32)
+    want, _ = ref.wkv6_ref(r, k, v, lw, u)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_wkv6_chunked_matches_ref():
+    """The jnp chunked-parallel form (training path) vs sequential oracle."""
+    b, t, h, kk = 2, 128, 4, 16
+    ks = jax.random.split(jax.random.key(0), 5)
+    r, k, v = (jax.random.normal(ks[i], (b, t, h, kk)) for i in range(3))
+    lw = jnp.clip(-jnp.exp(jax.random.normal(ks[3], (b, t, h, kk))),
+                  _LOG_DECAY_MIN, -1e-6)
+    u = jax.random.normal(ks[4], (h, kk)) * 0.1
+    got, s_got = wkv6_chunked(r, k, v, lw, u)
+    want, s_want = ref.wkv6_ref(r, k, v, lw, u)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s_got), np.asarray(s_want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("m,c", [(256, 45), (1024, 153), (300, 20), (512, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gram_sweep(m, c, dtype):
+    ks = jax.random.split(jax.random.key(m + c), 2)
+    x = jax.random.normal(ks[0], (m, c), dtype)
+    y = jax.random.normal(ks[1], (m,), dtype)
+    g, r = ops.gram(x, y)
+    g_ref, r_ref = ref.gram_ref(x, y)
+    tol = 2e-3 if dtype == jnp.float32 else 1.0
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g_ref),
+                               rtol=tol, atol=tol * 8)
+    np.testing.assert_allclose(np.asarray(r), np.asarray(r_ref),
+                               rtol=tol, atol=tol * 8)
+
+
+def test_gram_feeds_regression():
+    """End-to-end: kernel gram products solve the same normal equations."""
+    from repro.core import regression as reg
+    rng = np.random.default_rng(1)
+    n = 6
+    A = rng.normal(size=(n, n)); H = (A + A.T) / 2
+    gvec = rng.normal(size=n)
+    m = 512
+    d = rng.uniform(-1, 1, (m, n))
+    ys = d @ gvec + 0.5 * np.einsum("mi,ij,mj->m", d, H, d)
+    X = reg.design_matrix(jnp.asarray(d, jnp.float32))
+    G, r = ops.gram(X, jnp.asarray(ys, jnp.float32))
+    lam = 1e-7 * float(jnp.max(jnp.diagonal(G)))
+    beta = jnp.linalg.solve(G + lam * jnp.eye(G.shape[0]), r)
+    _, g_hat, H_hat = reg.unpack(beta, n)
+    np.testing.assert_allclose(np.asarray(g_hat), gvec, rtol=2e-2, atol=2e-2)
+    np.testing.assert_allclose(np.asarray(H_hat), H, rtol=5e-2, atol=5e-2)

@@ -1,0 +1,97 @@
+"""Property tests for the paper's §III regression (gradient+Hessian recovery)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import regression as reg
+
+settings = dict(max_examples=20, deadline=None,
+                suppress_health_check=[hypothesis.HealthCheck.too_slow])
+
+
+def _random_quadratic(rng, n):
+    A = rng.normal(size=(n, n))
+    H = (A + A.T) / 2
+    g = rng.normal(size=n)
+    c = float(rng.normal())
+    return c, g, H
+
+
+@hypothesis.given(n=st.integers(2, 8), seed=st.integers(0, 10_000))
+@hypothesis.settings(**settings)
+def test_exact_recovery_on_quadratics(n, seed):
+    """f(x'+δ)=c+gδ+½δHδ is recovered exactly from ≥ n_columns samples."""
+    rng = np.random.default_rng(seed)
+    c, g, H = _random_quadratic(rng, n)
+    m = reg.n_columns(n) + 10
+    deltas = jnp.asarray(rng.uniform(-1, 1, (m, n)), jnp.float32)
+    d = np.asarray(deltas, np.float64)
+    ys = jnp.asarray(c + d @ g + 0.5 * np.einsum("mi,ij,mj->m", d, H, d),
+                     jnp.float32)
+    c_hat, g_hat, H_hat = reg.fit_quadratic(deltas, ys)
+    np.testing.assert_allclose(np.asarray(g_hat), g, rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(H_hat), H, rtol=5e-3, atol=5e-3)
+    assert abs(float(c_hat) - c) < 1e-2
+
+
+@hypothesis.given(n=st.integers(2, 10))
+@hypothesis.settings(**settings)
+def test_column_count(n):
+    deltas = jnp.zeros((3, n))
+    x = reg.design_matrix(deltas)
+    assert x.shape == (3, reg.n_columns(n))
+    # paper's bound: n_columns <= n² + n (+1)
+    assert reg.n_columns(n) <= n * n + n + 1
+
+
+@hypothesis.given(n=st.integers(2, 8), seed=st.integers(0, 10_000))
+@hypothesis.settings(**settings)
+def test_newton_direction_is_descent(n, seed):
+    """-(H+λI)⁻¹g must have negative inner product with g (damped), even for
+    indefinite H."""
+    rng = np.random.default_rng(seed)
+    _, g, H = _random_quadratic(rng, n)
+    d = reg.newton_direction(jnp.asarray(g, jnp.float32),
+                             jnp.asarray(H, jnp.float32), damping=1e-3)
+    assert float(jnp.dot(d, jnp.asarray(g, jnp.float32))) < 0.0
+
+
+def test_newton_direction_matches_inverse_on_pd():
+    rng = np.random.default_rng(0)
+    n = 5
+    A = rng.normal(size=(n, n))
+    H = A @ A.T + n * np.eye(n)          # PD
+    g = rng.normal(size=n)
+    d = np.asarray(reg.newton_direction(jnp.asarray(g, jnp.float32),
+                                        jnp.asarray(H, jnp.float32), 1e-9))
+    np.testing.assert_allclose(d, -np.linalg.solve(H, g), rtol=1e-3, atol=1e-4)
+
+
+def test_weights_drop_samples():
+    """Weight-0 samples (failed evaluations) must not influence the fit."""
+    rng = np.random.default_rng(3)
+    n = 4
+    c, g, H = _random_quadratic(rng, n)
+    m = reg.n_columns(n) + 20
+    d = rng.uniform(-1, 1, (m, n))
+    ys = c + d @ g + 0.5 * np.einsum("mi,ij,mj->m", d, H, d)
+    ys_bad = ys.copy()
+    ys_bad[:5] = 1e6                                  # corrupted results
+    w = np.ones(m); w[:5] = 0.0
+    _, g_hat, H_hat = reg.fit_quadratic(jnp.asarray(d, jnp.float32),
+                                        jnp.asarray(ys_bad, jnp.float32),
+                                        jnp.asarray(w, jnp.float32))
+    np.testing.assert_allclose(np.asarray(g_hat), g, rtol=5e-3, atol=5e-3)
+
+
+def test_mad_outlier_weights_flag_corruption():
+    rng = np.random.default_rng(4)
+    ys = rng.normal(0, 1, 200)
+    ys[7] = 1e5
+    ys[100] = np.nan
+    w = np.asarray(reg.mad_outlier_weights(jnp.asarray(ys, jnp.float32)))
+    assert w[7] == 0.0 and w[100] == 0.0
+    assert w.sum() >= 190
