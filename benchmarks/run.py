@@ -1,10 +1,15 @@
 """Benchmark harness entry point: one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV.  ``python -m benchmarks.run``.
+
+``--smoke`` runs a CI-sized subset (currently the scalability module's
+substrate shootout) so perf regressions in the batched grid substrate are
+caught on every push without paying for the full sweeps.
 """
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import traceback
 
@@ -12,25 +17,34 @@ MODULES = [
     ("fig2_convergence", "paper Fig. 2 — ANM convergence on two stripes"),
     ("fig3_linesearch", "paper Fig. 3 — randomized line search escapes"),
     ("anm_vs_baselines", "paper §VI — ANM vs CGD vs numerical Newton"),
-    ("scalability", "paper §I/§VI — hosts & fault sweeps"),
+    ("scalability", "paper §I/§VI — hosts & fault sweeps + substrate shootout"),
     ("kernel_perf", "Pallas kernels (interpret) vs oracles"),
     ("train_throughput", "training substrate + paper-technique overhead"),
     ("roofline", "deliverable (g) — roofline table from dry-run artifacts"),
 ]
 
+SMOKE_MODULES = ["scalability"]
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="run a single benchmark")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI subset (batched-grid perf canary)")
     args = ap.parse_args()
     failures = 0
     for name, desc in MODULES:
         if args.only and args.only != name:
             continue
+        if args.smoke and name not in SMOKE_MODULES:
+            continue
         print(f"# === {name}: {desc} ===", flush=True)
         try:
             mod = __import__(f"benchmarks.{name}", fromlist=["run"])
-            mod.run()
+            if args.smoke and "smoke" in inspect.signature(mod.run).parameters:
+                mod.run(smoke=True)
+            else:
+                mod.run()
         except Exception:
             failures += 1
             traceback.print_exc()

@@ -4,71 +4,176 @@ Time-to-solution (simulated wall-clock) of FGDO-ANM vs. number of volunteer
 hosts, and degradation under increasing failure/malice rates.  The paper's
 point: the asynchronous method keeps scaling because every phase accepts any
 m results; the sequential baselines cannot use more than 2n hosts.
+
+Since the engine refactor this module also measures REAL wall-clock of the
+two grid substrates driving the same ``AnmEngine`` workload: the per-event
+simulator (one Python event + one fitness dispatch per result) against the
+vectorized batched grid (one jitted ``f_batch`` per tick) at 4096 hosts —
+the acceptance target is a ≥5× speedup.  ``--smoke`` (or ``run.py --smoke``)
+runs a down-scaled version of just that comparison for CI.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
+import time
 
 import numpy as np
 
 from benchmarks.common import emit
 from repro.core.anm import AnmConfig
+from repro.core.engine import AnmEngine
 from repro.core.fgdo import FgdoAnmServer
 from repro.core.grid import GridConfig, VolunteerGrid
+from repro.core.substrates.batched_grid import BatchedVolunteerGrid
 from repro.data import sdss
 import jax.numpy as jnp
 
 OUT = os.path.join(os.path.dirname(__file__), "..", "artifacts", "benchmarks")
 
 
-def run(out_dir=None, n_stars=8_000):
-    out_dir = out_dir or os.path.abspath(OUT)
-    os.makedirs(out_dir, exist_ok=True)
-    stripe = sdss.make_stripe("scal", n_stars=n_stars, seed=21)
-    _, f_single = sdss.make_fitness(stripe)
+def _substrate_shootout(n_hosts: int, n_stars: int, m: int, iters: int):
+    """Same engine config, same host population seed, two substrates.
+    Each side runs once untimed (jit warmup at its real shapes, like
+    ``common.time_fn``) and once timed.  Returns
+    (event_row, batched_row, speedup)."""
+    stripe = sdss.make_stripe("shootout", n_stars=n_stars, seed=29)
+    f_batch, f_single = sdss.make_fitness(stripe)
     fnp = lambda p: float(f_single(jnp.asarray(p, jnp.float32)))
     rng = np.random.default_rng(3)
     x0 = np.clip(stripe.truth + rng.normal(0, 0.2, 8).astype(np.float32),
                  sdss.LO, sdss.HI)
-    anm_cfg = AnmConfig(m_regression=100, m_line_search=100, max_iterations=5)
+    anm_cfg = AnmConfig(m_regression=m, m_line_search=m, max_iterations=iters)
+    grid_cfg = GridConfig(n_hosts=n_hosts, failure_prob=0.05,
+                          malicious_prob=0.01, seed=9)
 
-    results = {"hosts_sweep": [], "fault_sweep": []}
-    for n_hosts in [16, 64, 256, 1024]:
+    def run_event():
         server = FgdoAnmServer(x0, sdss.LO, sdss.HI, sdss.DEFAULT_STEP,
                                anm_cfg, seed=7)
-        grid = VolunteerGrid(fnp, GridConfig(
-            n_hosts=n_hosts, failure_prob=0.05, malicious_prob=0.01, seed=9))
-        stats = grid.run(server)
-        row = {"n_hosts": n_hosts, "sim_time_s": stats.sim_time,
-               "iterations": server.iteration, "final": server.best_fitness,
-               "stale": server.stats.stale, "completed": stats.completed}
-        results["hosts_sweep"].append(row)
-        emit(f"scal_hosts_{n_hosts}", stats.sim_time * 1e6,
-             f"final={server.best_fitness:.5f};sim_s={stats.sim_time:.0f}")
+        return server, VolunteerGrid(fnp, grid_cfg).run(server)
 
-    for fail, mal in [(0.0, 0.0), (0.1, 0.02), (0.3, 0.05), (0.5, 0.10)]:
-        server = FgdoAnmServer(x0, sdss.LO, sdss.HI, sdss.DEFAULT_STEP,
-                               anm_cfg, seed=7)
-        grid = VolunteerGrid(fnp, GridConfig(
-            n_hosts=128, failure_prob=fail, malicious_prob=mal, seed=13))
-        stats = grid.run(server)
-        row = {"failure_prob": fail, "malicious_prob": mal,
-               "sim_time_s": stats.sim_time, "final": server.best_fitness,
-               "validations_failed": server.stats.validations_failed,
-               "corrupted_injected": stats.corrupted}
-        results["fault_sweep"].append(row)
-        emit(f"scal_fault_{int(fail * 100)}pct", stats.sim_time * 1e6,
-             f"final={server.best_fitness:.5f};"
-             f"val_rejects={server.stats.validations_failed}")
+    def run_batched():
+        engine = AnmEngine(x0, sdss.LO, sdss.HI, sdss.DEFAULT_STEP,
+                           anm_cfg, seed=7)
+        return engine, BatchedVolunteerGrid(f_batch, grid_cfg).run(engine)
+
+    # warmup: compile everything both sides share (f_single dispatch path,
+    # the engine's fit_quadratic/eigh/clip jits — same shapes since m is the
+    # same) with a 1-iteration run on a tiny fleet, instead of replaying the
+    # full slow per-event simulation untimed
+    warm_cfg = AnmConfig(m_regression=m, m_line_search=m, max_iterations=1)
+    warm_server = FgdoAnmServer(x0, sdss.LO, sdss.HI, sdss.DEFAULT_STEP,
+                                warm_cfg, seed=7)
+    VolunteerGrid(fnp, GridConfig(n_hosts=32, failure_prob=0.05,
+                                  malicious_prob=0.01, seed=9)).run(warm_server)
+    t0 = time.perf_counter()
+    server, ev_stats = run_event()
+    t_event = time.perf_counter() - t0
+
+    run_batched()
+    t0 = time.perf_counter()
+    engine, bt_stats = run_batched()
+    t_batched = time.perf_counter() - t0
+
+    event_row = {"substrate": "per_event", "wall_s": t_event,
+                 "sim_time_s": ev_stats.sim_time, "final": server.best_fitness,
+                 "iterations": server.iteration,
+                 "completed": ev_stats.completed}
+    batched_row = {"substrate": "batched", "wall_s": t_batched,
+                   "sim_time_s": bt_stats.sim_time,
+                   "final": engine.best_fitness,
+                   "iterations": engine.iteration,
+                   "completed": bt_stats.completed,
+                   "ticks": bt_stats.ticks,
+                   "batch_calls": bt_stats.batch_calls,
+                   "mean_batch": (bt_stats.batched_evals
+                                  / max(bt_stats.batch_calls, 1))}
+    return event_row, batched_row, t_event / max(t_batched, 1e-9)
+
+
+def run(out_dir=None, n_stars=8_000, smoke: bool = False):
+    out_dir = out_dir or os.path.abspath(OUT)
+    os.makedirs(out_dir, exist_ok=True)
+    results = {"hosts_sweep": [], "fault_sweep": [], "substrate_shootout": {}}
+
+    if not smoke:
+        stripe = sdss.make_stripe("scal", n_stars=n_stars, seed=21)
+        _, f_single = sdss.make_fitness(stripe)
+        fnp = lambda p: float(f_single(jnp.asarray(p, jnp.float32)))
+        rng = np.random.default_rng(3)
+        x0 = np.clip(stripe.truth + rng.normal(0, 0.2, 8).astype(np.float32),
+                     sdss.LO, sdss.HI)
+        anm_cfg = AnmConfig(m_regression=100, m_line_search=100,
+                            max_iterations=5)
+
+        for n_hosts in [16, 64, 256, 1024]:
+            server = FgdoAnmServer(x0, sdss.LO, sdss.HI, sdss.DEFAULT_STEP,
+                                   anm_cfg, seed=7)
+            grid = VolunteerGrid(fnp, GridConfig(
+                n_hosts=n_hosts, failure_prob=0.05, malicious_prob=0.01,
+                seed=9))
+            stats = grid.run(server)
+            row = {"n_hosts": n_hosts, "sim_time_s": stats.sim_time,
+                   "iterations": server.iteration,
+                   "final": server.best_fitness,
+                   "stale": server.stats.stale, "completed": stats.completed}
+            results["hosts_sweep"].append(row)
+            emit(f"scal_hosts_{n_hosts}", stats.sim_time * 1e6,
+                 f"final={server.best_fitness:.5f};sim_s={stats.sim_time:.0f}")
+
+        for fail, mal in [(0.0, 0.0), (0.1, 0.02), (0.3, 0.05), (0.5, 0.10)]:
+            server = FgdoAnmServer(x0, sdss.LO, sdss.HI, sdss.DEFAULT_STEP,
+                                   anm_cfg, seed=7)
+            grid = VolunteerGrid(fnp, GridConfig(
+                n_hosts=128, failure_prob=fail, malicious_prob=mal, seed=13))
+            stats = grid.run(server)
+            row = {"failure_prob": fail, "malicious_prob": mal,
+                   "sim_time_s": stats.sim_time, "final": server.best_fitness,
+                   "validations_failed": server.stats.validations_failed,
+                   "corrupted_injected": stats.corrupted}
+            results["fault_sweep"].append(row)
+            emit(f"scal_fault_{int(fail * 100)}pct", stats.sim_time * 1e6,
+                 f"final={server.best_fitness:.5f};"
+                 f"val_rejects={server.stats.validations_failed}")
+
+    # -- substrate shootout: per-event vs batched grid, same engine ----------
+    if smoke:
+        n_hosts, ss_stars, m, iters = 1024, 2_000, 64, 1
+    else:
+        n_hosts, ss_stars, m, iters = 4096, 2_000, 64, 2
+    ev, bt, speedup = _substrate_shootout(n_hosts, ss_stars, m, iters)
+    results["substrate_shootout"] = {
+        "n_hosts": n_hosts, "per_event": ev, "batched": bt,
+        "speedup": speedup}
+    emit(f"scal_substrate_event_{n_hosts}", ev["wall_s"] * 1e6,
+         f"final={ev['final']:.5f};completed={ev['completed']}")
+    emit(f"scal_substrate_batched_{n_hosts}", bt["wall_s"] * 1e6,
+         f"final={bt['final']:.5f};completed={bt['completed']};"
+         f"mean_batch={bt['mean_batch']:.0f}")
+    emit(f"scal_substrate_speedup_{n_hosts}", speedup,
+         f"target>=5x;event_s={ev['wall_s']:.1f};batched_s={bt['wall_s']:.2f}")
 
     with open(os.path.join(out_dir, "scalability.json"), "w") as f:
         json.dump(results, f, indent=2)
+    # the canary must be able to FAIL: gate the speedup so the CI smoke job
+    # goes red when the batched substrate regresses (lower bar in smoke —
+    # shared CI runners are noisy; the full acceptance target is 5x)
+    min_speedup = 3.0 if smoke else 5.0
+    if speedup < min_speedup:
+        raise RuntimeError(
+            f"batched-grid speedup {speedup:.2f}x below the "
+            f"{min_speedup:.0f}x floor (event {ev['wall_s']:.2f}s vs "
+            f"batched {bt['wall_s']:.2f}s at {n_hosts} hosts)")
     return results
 
 
 def main():
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized substrate shootout only")
+    args = ap.parse_args()
+    run(smoke=args.smoke)
 
 
 if __name__ == "__main__":

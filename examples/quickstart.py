@@ -2,7 +2,10 @@
 
 Fits a 2-D Rosenbrock-like bowl with the paper's three ingredients:
 box-sampled regression (gradient+Hessian in ONE parallel batch), the
-damped Newton direction, and the randomized line search.
+damped Newton direction, and the randomized line search.  ``anm_minimize``
+is a thin synchronous driver over the same AnmEngine state machine that the
+asynchronous volunteer-grid substrates use (see examples/volunteer_grid.py
+and DESIGN.md §1) — including quorum validation of every committed point.
 
     PYTHONPATH=src python examples/quickstart.py
 """

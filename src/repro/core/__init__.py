@@ -2,10 +2,13 @@
 # with regression-based gradient+Hessian estimation, the randomized
 # asynchronous line search, and the FGDO work-generation/validation/
 # assimilation runtime — plus the pod-scale adaptations (subspace Newton,
-# parallel line search).
+# parallel line search).  All substrates drive the one AnmEngine state
+# machine in core/engine.py (DESIGN.md §1).
 from repro.core.anm import AnmConfig, AnmState, anm_minimize  # noqa: F401
+from repro.core.engine import AnmEngine, EvalRequest, EvalResult  # noqa: F401
 from repro.core.fgdo import FgdoAnmServer, WorkUnit  # noqa: F401
 from repro.core.grid import GridConfig, VolunteerGrid  # noqa: F401
+from repro.core.substrates.batched_grid import BatchedVolunteerGrid  # noqa: F401
 from repro.core.parallel_line_search import (  # noqa: F401
     LineSearchConfig,
     randomized_line_search,

@@ -1,50 +1,29 @@
-"""The Asynchronous Newton Method (paper §III–§V), phase-structured.
+"""Synchronous ANM driver — the thinnest substrate over the shared engine.
 
-``AnmState`` + the two phase functions are deliberately *event-driven*: the
-synchronous driver (``anm_minimize``) and the asynchronous FGDO server
-(core/fgdo.py) both advance the same state machine — generate points,
-assimilate whichever evaluations come back, fit, move.  Any ≥ m_min subset of
-results is sufficient for a phase; stragglers/failures never stall an
-iteration.
+All phase logic (regression fit, alpha clipping, candidate ranking, quorum
+validation, commit/shrink) lives in core/engine.py; this module only turns
+each batch of engine requests into ONE ``f_batch`` call and feeds every
+result straight back.  The asynchronous FGDO server (core/fgdo.py) and the
+vectorized grid simulator (core/substrates/batched_grid.py) drive the
+identical engine — that equivalence is what tests/test_engine.py's parity
+test pins down.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional, Tuple
+from typing import Callable, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import regression, sampling
-
-
-@dataclasses.dataclass(frozen=True)
-class AnmConfig:
-    m_regression: int = 1000          # paper §VI: 1000 per regression phase
-    m_line_search: int = 1000         # paper §VI: 1000 per line-search phase
-    alpha_min: float = 0.0
-    alpha_max: float = 2.0
-    ridge: float = 1e-8
-    damping: float = 1e-6
-    max_iterations: int = 50
-    tol: float = 1e-10                # stop when best fitness stops improving
-    outlier_guard: bool = True        # MAD rejection of malicious results
-    shrink_on_fail: float = 0.5       # shrink step vector if no improvement
-
-
-@dataclasses.dataclass
-class IterationRecord:
-    iteration: int
-    best_fitness: float
-    avg_line_fitness: float
-    center: np.ndarray
-    evals_used: int
-    best_alpha: float
+from repro.core.engine import (AnmConfig, AnmEngine, EvalResult,  # noqa: F401
+                               IterationRecord)
 
 
 @dataclasses.dataclass
 class AnmState:
+    """Snapshot of the engine exposed to callers of ``anm_minimize``."""
     center: jax.Array                 # x' — regression center
     step: jax.Array                   # s  — user step vector
     lo: jax.Array
@@ -55,21 +34,13 @@ class AnmState:
     history: List[IterationRecord] = dataclasses.field(default_factory=list)
 
 
-def regression_phase(state: AnmState, cfg: AnmConfig, points: jax.Array,
-                     ys: jax.Array) -> jax.Array:
-    """Fit gradient+Hessian from completed evaluations, return line direction."""
-    weights = regression.mad_outlier_weights(ys) if cfg.outlier_guard else None
-    deltas = points - state.center[None, :]
-    _, g, H = regression.fit_quadratic(deltas, ys, weights, cfg.ridge)
-    return regression.newton_direction(g, H, cfg.damping)
-
-
-def line_search_phase(state: AnmState, cfg: AnmConfig, points: jax.Array,
-                      alphas: jax.Array, ys: jax.Array) -> Tuple[jax.Array, float, float]:
-    """Select the best validated point (paper §IV). Returns (x_next, f_best, α_best)."""
-    ys = jnp.where(jnp.isfinite(ys), ys, jnp.inf)
-    i = int(jnp.argmin(ys))
-    return points[i], float(ys[i]), float(alphas[i])
+def _sync(state: AnmState, engine: AnmEngine) -> None:
+    state.center = jnp.asarray(engine.center, jnp.float32)
+    state.step = jnp.asarray(engine.step, jnp.float32)
+    state.best_fitness = engine.best_fitness
+    state.iteration = engine.iteration
+    if engine.direction is not None:
+        state.direction = jnp.asarray(engine.direction, jnp.float32)
 
 
 def anm_minimize(f_batch: Callable[[jax.Array], jax.Array], x0, lo, hi, step,
@@ -77,49 +48,33 @@ def anm_minimize(f_batch: Callable[[jax.Array], jax.Array], x0, lo, hi, step,
                  callback=None) -> AnmState:
     """Synchronous reference driver (each phase evaluated as one batch).
 
-    f_batch: (m, n) -> (m,) fitness (lower is better).
-    The FGDO server in core/fgdo.py runs the identical phase logic with
-    asynchronous, faulty, heterogeneous evaluation.
+    f_batch: (m, n) -> (m,) fitness (lower is better).  ``key`` seeds the
+    engine's sampler; with a deterministic ``f_batch`` the quorum validation
+    trivially confirms every candidate, so this driver follows the same
+    commit path as the asynchronous substrates.
     """
-    if key is None:
-        key = jax.random.key(0)
+    seed = 0 if key is None else int(jax.random.randint(key, (), 0, 2**31 - 1))
+    engine = AnmEngine(x0, lo, hi, step, cfg, seed=seed)
+    engine.set_initial_fitness(
+        float(f_batch(jnp.asarray(x0, jnp.float32)[None, :])[0]))
     state = AnmState(center=jnp.asarray(x0, jnp.float32),
                      step=jnp.asarray(step, jnp.float32),
                      lo=jnp.asarray(lo, jnp.float32),
-                     hi=jnp.asarray(hi, jnp.float32))
-    state.best_fitness = float(f_batch(state.center[None, :])[0])
-
-    for it in range(cfg.max_iterations):
-        key, k1, k2 = jax.random.split(key, 3)
-        pts = sampling.sample_box(k1, state.center, state.step, cfg.m_regression)
-        pts = jnp.clip(pts, state.lo, state.hi)
-        ys = f_batch(pts)
-        direction = regression_phase(state, cfg, pts, ys)
-        state.direction = direction
-
-        a_lo, a_hi = sampling.clip_alpha_range(state.center, direction,
-                                               state.lo, state.hi,
-                                               cfg.alpha_min, cfg.alpha_max)
-        lpts, alphas = sampling.sample_line(k2, state.center, direction,
-                                            a_lo, a_hi, cfg.m_line_search)
-        lys = f_batch(lpts)
-        x_next, f_best, a_best = line_search_phase(state, cfg, lpts, alphas, lys)
-
-        avg = float(jnp.mean(jnp.where(jnp.isfinite(lys), lys,
-                                       jnp.nanmax(jnp.where(jnp.isfinite(lys), lys, -jnp.inf)))))
-        improved = f_best < state.best_fitness - cfg.tol
-        if improved:
-            state.center = x_next
-            state.best_fitness = f_best
-        else:
-            state.step = state.step * cfg.shrink_on_fail
-        state.iteration = it + 1
-        state.history.append(IterationRecord(
-            iteration=it + 1, best_fitness=state.best_fitness,
-            avg_line_fitness=avg, center=np.asarray(state.center),
-            evals_used=cfg.m_regression + cfg.m_line_search, best_alpha=a_best))
-        if callback is not None:
-            callback(state)
-        if not improved and float(jnp.max(state.step)) < 1e-12:
-            break
+                     hi=jnp.asarray(hi, jnp.float32),
+                     best_fitness=engine.best_fitness,
+                     history=engine.history)
+    while not engine.done:
+        reqs = engine.generate()
+        if not reqs:
+            break                     # defensive: a stuck engine cannot loop
+        pts = jnp.asarray(np.stack([r.point for r in reqs]), jnp.float32)
+        ys = np.asarray(f_batch(pts), np.float64)
+        transitions = engine.assimilate(
+            [EvalResult(r, float(y)) for r, y in zip(reqs, ys)])
+        for tr in transitions:
+            if tr.kind == "commit":
+                _sync(state, engine)
+                if callback is not None:
+                    callback(state)
+    _sync(state, engine)
     return state

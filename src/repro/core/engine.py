@@ -1,0 +1,340 @@
+"""The ANM engine: one substrate-agnostic Newton state machine (DESIGN.md §1).
+
+The paper's central claim is that a single phase-structured state machine —
+box-sampled regression → damped Newton direction → randomized line search →
+quorum validation → commit/shrink — runs unchanged on any computing
+substrate, from a synchronous MPI batch to an asynchronous, faulty BOINC
+grid.  ``AnmEngine`` is that state machine, extracted so it exists exactly
+once.  Substrates drive it through a two-call event API:
+
+    reqs = engine.generate(k)        # up to k evaluation requests
+    engine.assimilate(results)       # any completed subset, in any order
+
+and never see phase logic.  Three substrates ship with the repo:
+
+  * core/anm.py                      — synchronous batch driver
+                                       (one ``f_batch`` call per phase);
+  * core/fgdo.py                     — BOINC-style asynchronous server
+                                       (workunit ids, stale filtering,
+                                       reliable-host scheduling);
+  * core/substrates/batched_grid.py  — vectorized grid simulator
+                                       (thousands of hosts per tick, one
+                                       jitted ``f_batch`` call per tick).
+
+Robustness semantics reproduced from the paper (see DESIGN.md §2):
+  * a phase advances when ANY m results have been assimilated; results from
+    an earlier phase are discarded as stale — stragglers never stall (§III);
+  * only results that will be USED to generate new work (the best
+    line-search point) are validated, by quorum re-evaluation (§V);
+  * malicious/corrupt fitness values additionally face a MAD outlier guard
+    before entering the regression.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Iterable, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import regression, sampling
+
+REGRESSION, LINESEARCH, VALIDATING, DONE = \
+    "regression", "linesearch", "validating", "done"
+
+
+@dataclasses.dataclass(frozen=True)
+class AnmConfig:
+    m_regression: int = 1000          # paper §VI: 1000 per regression phase
+    m_line_search: int = 1000         # paper §VI: 1000 per line-search phase
+    alpha_min: float = 0.0
+    alpha_max: float = 2.0
+    ridge: float = 1e-8
+    damping: float = 1e-6
+    max_iterations: int = 50
+    tol: float = 1e-10                # stop when best fitness stops improving
+    outlier_guard: bool = True        # MAD rejection of malicious results
+    shrink_on_fail: float = 0.5       # shrink step vector if no improvement
+
+
+@dataclasses.dataclass
+class IterationRecord:
+    iteration: int
+    best_fitness: float
+    avg_line_fitness: float
+    center: np.ndarray
+    evals_used: int
+    best_alpha: float
+
+
+@dataclasses.dataclass(frozen=True)
+class EvalRequest:
+    """One requested fitness evaluation.  ``ticket`` is unique per engine;
+    ``validates`` carries the ticket of the candidate result this request
+    re-checks (quorum replicas only)."""
+    ticket: int
+    phase_id: int
+    point: np.ndarray
+    alpha: float = float("nan")
+    validates: Optional[int] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class EvalResult:
+    request: EvalRequest
+    y: float
+
+
+@dataclasses.dataclass(frozen=True)
+class Transition:
+    """Phase-machine event returned by ``assimilate`` so substrates can log
+    or react without inspecting engine internals."""
+    kind: str                         # direction|validating|rejected|commit|done
+    iteration: int
+    improved: bool = False
+
+
+@dataclasses.dataclass
+class EngineStats:
+    issued: int = 0
+    assimilated: int = 0
+    stale: int = 0
+    validations_issued: int = 0
+    validations_failed: int = 0
+    candidates_rejected: int = 0
+
+
+class AnmEngine:
+    """The unified ANM phase machine.  Owns all decision state; substrates
+    own time, hosts, and evaluation."""
+
+    def __init__(self, x0, lo, hi, step, cfg: AnmConfig = AnmConfig(),
+                 seed: int = 0, validation_quorum: int = 2,
+                 validation_rtol: float = 1e-6):
+        self.cfg = cfg
+        self.center = np.asarray(x0, np.float64)
+        self.lo = np.asarray(lo, np.float64)
+        self.hi = np.asarray(hi, np.float64)
+        self.step = np.asarray(step, np.float64)
+        self.n = self.center.shape[0]
+        self.rng = np.random.default_rng(seed)
+        self.quorum = validation_quorum
+        self.vrtol = validation_rtol
+
+        self.phase = REGRESSION
+        self.phase_id = 0
+        self.iteration = 0
+        self.best_fitness = float("inf")
+        self.direction: Optional[np.ndarray] = None
+        self.alpha_range: Tuple[float, float] = (cfg.alpha_min, cfg.alpha_max)
+        self.results: List[Tuple[np.ndarray, float, float, int]] = []  # pt,y,a,ticket
+        self.stats = EngineStats()
+        self.history: List[IterationRecord] = []
+        self._ticket = itertools.count()
+        # validation bookkeeping: ranked candidates and votes for the current one
+        self._candidates: List[Tuple[float, np.ndarray, float, int]] = []
+        self._candidate: Optional[Tuple[float, np.ndarray, float, int]] = None
+        self._votes: List[float] = []
+        self._pending_validation = 0
+        self._line_avg = float("nan")
+
+    # -- introspection ------------------------------------------------------
+
+    @property
+    def done(self) -> bool:
+        return self.phase == DONE
+
+    @property
+    def validating(self) -> bool:
+        return self.phase == VALIDATING
+
+    @property
+    def validation_pending(self) -> int:
+        """Quorum replicas not yet handed out for the current candidate."""
+        return self._pending_validation
+
+    def set_initial_fitness(self, y: float) -> None:
+        """Seed the improvement threshold with f(x0) when the substrate can
+        afford an up-front evaluation (the synchronous driver does)."""
+        self.best_fitness = float(y)
+
+    def wanted(self) -> int:
+        """Natural batch size for the current phase — what a substrate with
+        unlimited capacity should request."""
+        if self.phase == REGRESSION:
+            return max(self.cfg.m_regression - len(self.results), 0)
+        if self.phase == LINESEARCH:
+            return max(self.cfg.m_line_search - len(self.results), 0)
+        if self.phase == VALIDATING:
+            return self._pending_validation
+        return 0
+
+    # -- work generation ----------------------------------------------------
+
+    def generate(self, k: Optional[int] = None) -> List[EvalRequest]:
+        """Return up to ``k`` evaluation requests (``k=None``: the phase's
+        natural batch).  While validating, only outstanding quorum replicas
+        are handed out; an empty list means "nothing to do right now"."""
+        if self.phase == DONE:
+            return []
+        if self.phase == VALIDATING:
+            k = self._pending_validation if k is None else \
+                min(k, self._pending_validation)
+            reqs = []
+            for _ in range(max(k, 0)):
+                self._pending_validation -= 1
+                reqs.append(self._validation_request())
+            return reqs
+        if self.phase == REGRESSION:
+            k = self.wanted() if k is None else k
+            if k <= 0:
+                return []
+            u = self.rng.uniform(-1.0, 1.0, (k, self.n))
+            pts = np.clip(self.center[None, :] + u * self.step[None, :],
+                          self.lo, self.hi)
+            alphas = np.full(k, np.nan)
+        else:  # LINESEARCH
+            k = self.wanted() if k is None else k
+            if k <= 0:
+                return []
+            a_lo, a_hi = self.alpha_range
+            alphas = self.rng.uniform(a_lo, a_hi, k)
+            pts = self.center[None, :] + alphas[:, None] * self.direction[None, :]
+        self.stats.issued += k
+        return [EvalRequest(next(self._ticket), self.phase_id, pts[i],
+                            float(alphas[i])) for i in range(k)]
+
+    def reissue_validation(self) -> Optional[EvalRequest]:
+        """Extra quorum replica beyond the pending budget — for substrates
+        whose replicas can be lost (host failure / reissue timeout)."""
+        if self.phase != VALIDATING or self._candidate is None:
+            return None
+        return self._validation_request()
+
+    def _validation_request(self) -> EvalRequest:
+        y, pt, alpha, ticket = self._candidate
+        self.stats.validations_issued += 1
+        self.stats.issued += 1
+        return EvalRequest(next(self._ticket), self.phase_id, pt.copy(),
+                           alpha, validates=ticket)
+
+    # -- assimilation -------------------------------------------------------
+
+    def assimilate(self, results: Iterable[EvalResult]) -> List[Transition]:
+        """Fold any completed evaluations into the phase machine.  Returns
+        the phase transitions they caused (possibly none, possibly several —
+        e.g. a rejected candidate followed by a commit)."""
+        transitions: List[Transition] = []
+        for res in results:
+            if self.phase == DONE:
+                break
+            req = res.request
+            if req.phase_id != self.phase_id:
+                self.stats.stale += 1
+                continue
+            self.stats.assimilated += 1
+            if req.validates is not None:
+                if self._candidate is not None and \
+                        req.validates == self._candidate[3]:
+                    self._votes.append(float(res.y))
+                    transitions.extend(self._check_validation())
+                else:
+                    self.stats.stale += 1   # replica for an already-decided candidate
+                continue
+            self.results.append((req.point, float(res.y), req.alpha, req.ticket))
+            m_needed = (self.cfg.m_regression if self.phase == REGRESSION
+                        else self.cfg.m_line_search)
+            if len(self.results) >= m_needed:
+                if self.phase == REGRESSION:
+                    transitions.extend(self._finish_regression())
+                else:
+                    transitions.extend(self._finish_line_search())
+        return transitions
+
+    # -- phase transitions --------------------------------------------------
+
+    def _finish_regression(self) -> List[Transition]:
+        pts = np.stack([r[0] for r in self.results])
+        ys = np.array([r[1] for r in self.results])
+        w = (np.asarray(regression.mad_outlier_weights(jnp.asarray(ys)))
+             if self.cfg.outlier_guard else None)
+        deltas = jnp.asarray(pts - self.center[None, :], jnp.float32)
+        _, g, H = regression.fit_quadratic(
+            deltas, jnp.asarray(ys, jnp.float32),
+            None if w is None else jnp.asarray(w, jnp.float32), self.cfg.ridge)
+        d = regression.newton_direction(g, H, self.cfg.damping)
+        self.direction = np.asarray(d, np.float64)
+        a_lo, a_hi = sampling.clip_alpha_range(
+            jnp.asarray(self.center, jnp.float32), jnp.asarray(d),
+            jnp.asarray(self.lo, jnp.float32), jnp.asarray(self.hi, jnp.float32),
+            self.cfg.alpha_min, self.cfg.alpha_max)
+        self.alpha_range = (float(a_lo), float(a_hi))
+        self._advance(LINESEARCH)
+        return [Transition("direction", self.iteration)]
+
+    def _finish_line_search(self) -> List[Transition]:
+        finite = [(y, pt, a, t) for pt, y, a, t in self.results
+                  if np.isfinite(y)]
+        finite.sort(key=lambda r: r[0])
+        self._line_avg = (float(np.mean([r[0] for r in finite]))
+                          if finite else float("nan"))
+        self._advance(VALIDATING)
+        self._candidates = finite
+        return self._start_validation()
+
+    def _start_validation(self) -> List[Transition]:
+        if not self._candidates:
+            # nothing usable: shrink step, next iteration from the same center
+            return self._commit(self.center, self.best_fitness, float("nan"),
+                                improved=False)
+        self._candidate = self._candidates.pop(0)
+        self._votes = [self._candidate[0]]
+        self._pending_validation = self.quorum
+        return [Transition("validating", self.iteration)]
+
+    def _check_validation(self) -> List[Transition]:
+        need = self.quorum + 1
+        if len(self._votes) < need:
+            return []
+        votes = np.array(self._votes)
+        med = np.median(votes)
+        agree = np.sum(np.abs(votes - med) <= self.vrtol * max(1.0, abs(med)))
+        cand_y, cand_pt, cand_a, _ = self._candidate
+        self._candidate = None
+        if agree >= (need // 2 + 1) and \
+                abs(cand_y - med) <= self.vrtol * max(1.0, abs(med)):
+            improved = med < self.best_fitness - self.cfg.tol
+            return self._commit(cand_pt, float(med), cand_a, improved)
+        self.stats.validations_failed += 1
+        self.stats.candidates_rejected += 1
+        return [Transition("rejected", self.iteration)] + self._start_validation()
+
+    def _commit(self, x_next, f_best, alpha, improved: bool) -> List[Transition]:
+        if improved:
+            self.center = np.asarray(x_next, np.float64)
+            self.best_fitness = f_best
+        else:
+            self.step = self.step * self.cfg.shrink_on_fail
+        self.iteration += 1
+        self.history.append(IterationRecord(
+            iteration=self.iteration, best_fitness=self.best_fitness,
+            avg_line_fitness=self._line_avg, center=self.center.copy(),
+            evals_used=self.stats.assimilated, best_alpha=alpha))
+        transitions = [Transition("commit", self.iteration, improved)]
+        if self.iteration >= self.cfg.max_iterations or \
+                (not improved and float(np.max(self.step)) < 1e-12):
+            self._advance(DONE)
+            transitions.append(Transition("done", self.iteration))
+        else:
+            self._advance(REGRESSION)
+        return transitions
+
+    def _advance(self, phase: str) -> None:
+        self.phase = phase
+        self.phase_id += 1
+        self.results = []
+        self._candidates = []
+        self._candidate = None
+        self._votes = []
+        self._pending_validation = 0

@@ -1,8 +1,17 @@
 """FGDO: the asynchronous work-generator / validator / assimilator (paper §V).
 
-The server is a pure state machine driven by (generate_work, assimilate)
-callbacks from a computing substrate — here the discrete-event volunteer grid
-in core/grid.py; on a pod, data-parallel workers play the same role.
+Since the engine refactor (DESIGN.md §1) this server holds NO phase logic:
+``AnmEngine`` owns regression, line search, quorum validation and commits.
+What remains here is the BOINC-shaped substrate adapter —
+
+  * workunit ids and the outstanding-work table,
+  * stale filtering (the engine discards by phase id; this layer merely
+    carries it through the WorkUnit),
+  * per-host turnaround tracking and reliable-host scheduling: validation
+    replicas, which gate the next iteration, go only to hosts with
+    below-median observed turnaround so one slow volunteer can't stall
+    the search,
+  * a reissue timeout for validation replicas lost to vanished hosts.
 
 Semantics reproduced from the paper:
   * work is generated on demand — a fresh random point per request, no
@@ -17,17 +26,15 @@ Semantics reproduced from the paper:
 from __future__ import annotations
 
 import dataclasses
-import itertools
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import regression, sampling
-from repro.core.anm import AnmConfig, IterationRecord
+from repro.core.engine import (AnmConfig, AnmEngine, EngineStats, EvalRequest,
+                               EvalResult, IterationRecord, LINESEARCH,
+                               VALIDATING)
 
-REGRESSION, LINESEARCH = "regression", "linesearch"
+ServerStats = EngineStats             # back-compat alias
 
 
 @dataclasses.dataclass
@@ -40,56 +47,71 @@ class WorkUnit:
     issued_at: float = 0.0
 
 
-@dataclasses.dataclass
-class ServerStats:
-    issued: int = 0
-    assimilated: int = 0
-    stale: int = 0
-    validations_issued: int = 0
-    validations_failed: int = 0
-    candidates_rejected: int = 0
-
-
 class FgdoAnmServer:
-    """Asynchronous Newton method as a BOINC-style server."""
+    """Asynchronous Newton method as a BOINC-style server over AnmEngine."""
 
     def __init__(self, x0, lo, hi, step, cfg: AnmConfig = AnmConfig(),
                  seed: int = 0, validation_quorum: int = 2,
                  validation_rtol: float = 1e-6,
                  val_reissue_timeout: float = 600.0):
+        self.engine = AnmEngine(x0, lo, hi, step, cfg, seed=seed,
+                                validation_quorum=validation_quorum,
+                                validation_rtol=validation_rtol)
+        self.cfg = cfg
         self.val_reissue_timeout = val_reissue_timeout
         self._last_val_issue = 0.0
-        self.cfg = cfg
-        self.center = np.asarray(x0, np.float64)
-        self.lo = np.asarray(lo, np.float64)
-        self.hi = np.asarray(hi, np.float64)
-        self.step = np.asarray(step, np.float64)
-        self.rng = np.random.default_rng(seed)
-        self.quorum = validation_quorum
-        self.vrtol = validation_rtol
-
-        self.phase = REGRESSION
-        self.phase_id = 0
-        self.iteration = 0
-        self.best_fitness = float("inf")
-        self.direction: Optional[np.ndarray] = None
-        self.alpha_range: Tuple[float, float] = (cfg.alpha_min, cfg.alpha_max)
-        self.results: List[Tuple[np.ndarray, float, float, int]] = []  # pt,y,alpha,wu
         self.outstanding: Dict[int, WorkUnit] = {}
-        self._wu_counter = itertools.count()
-        self.stats = ServerStats()
-        self.history: List[IterationRecord] = []
-        self.done = False
-        # validation bookkeeping: candidate queue (sorted by fitness) and votes
-        self._candidates: List[Tuple[float, np.ndarray, float, int]] = []
-        self._validating: Optional[Tuple[float, np.ndarray, float, int]] = None
-        self._votes: List[float] = []
-        self._pending_validation_issues = 0
-        self.validating = False      # line-search collection finished, quorum pending
-        # BOINC-style reliable-host scheduling: validation replicas (which
-        # gate the next iteration) go only to hosts with below-median
-        # observed turnaround, so one slow volunteer can't stall the search.
         self._host_turnaround: Dict[int, float] = {}
+
+    # -- engine views (back-compat surface) ---------------------------------
+
+    @property
+    def center(self) -> np.ndarray:
+        return self.engine.center
+
+    @property
+    def step(self) -> np.ndarray:
+        return self.engine.step
+
+    @property
+    def best_fitness(self) -> float:
+        return self.engine.best_fitness
+
+    @property
+    def iteration(self) -> int:
+        return self.engine.iteration
+
+    @property
+    def done(self) -> bool:
+        return self.engine.done
+
+    @property
+    def phase(self) -> str:
+        # validation is the tail of the line-search phase in BOINC terms
+        p = self.engine.phase
+        return LINESEARCH if p == VALIDATING else p
+
+    @property
+    def validating(self) -> bool:
+        return self.engine.validating
+
+    @property
+    def direction(self) -> Optional[np.ndarray]:
+        return self.engine.direction
+
+    @property
+    def alpha_range(self) -> Tuple[float, float]:
+        return self.engine.alpha_range
+
+    @property
+    def stats(self) -> EngineStats:
+        return self.engine.stats
+
+    @property
+    def history(self) -> List[IterationRecord]:
+        return self.engine.history
+
+    # -- reliable-host scheduling -------------------------------------------
 
     def _host_reliable(self, host_id: int) -> bool:
         t = self._host_turnaround.get(host_id)
@@ -101,39 +123,30 @@ class FgdoAnmServer:
     # -- work generation ----------------------------------------------------
 
     def generate_work(self, host_id: int, now: float) -> Optional[WorkUnit]:
-        if self.done:
+        eng = self.engine
+        if eng.done:
             return None
-        if self.validating:
-            if self._validating is None:
-                return None
+        if eng.validating:
             timed_out = now - self._last_val_issue > self.val_reissue_timeout
-            if self._pending_validation_issues <= 0 and not timed_out:
+            if eng.validation_pending <= 0 and not timed_out:
                 return None          # quorum already issued; host retries later
             if not self._host_reliable(host_id) and not timed_out:
                 return None          # latency-critical WU: reliable hosts only
-            if self._pending_validation_issues > 0:
-                self._pending_validation_issues -= 1
-            wu_id = next(self._wu_counter)
+            if eng.validation_pending > 0:
+                req = eng.generate(1)[0]
+            else:
+                req = eng.reissue_validation()
+            if req is None:
+                return None
             self._last_val_issue = now
-            wu = WorkUnit(wu_id, self.phase_id, self._validating[1].copy(),
-                          self._validating[2], validates=self._validating[3],
-                          issued_at=now)
-            self.stats.validations_issued += 1
-            self.outstanding[wu_id] = wu
-            self.stats.issued += 1
-            return wu
-        wu_id = next(self._wu_counter)
-        if self.phase == REGRESSION:
-            u = self.rng.uniform(-1.0, 1.0, self.center.shape)
-            pt = np.clip(self.center + u * self.step, self.lo, self.hi)
-            wu = WorkUnit(wu_id, self.phase_id, pt, issued_at=now)
         else:
-            a_lo, a_hi = self.alpha_range
-            alpha = float(self.rng.uniform(a_lo, a_hi))
-            pt = self.center + alpha * self.direction
-            wu = WorkUnit(wu_id, self.phase_id, pt, alpha, issued_at=now)
-        self.outstanding[wu_id] = wu
-        self.stats.issued += 1
+            reqs = eng.generate(1)
+            if not reqs:
+                return None
+            req = reqs[0]
+        wu = WorkUnit(req.ticket, req.phase_id, np.asarray(req.point),
+                      req.alpha, req.validates, issued_at=now)
+        self.outstanding[wu.wu_id] = wu
         return wu
 
     # -- assimilation -------------------------------------------------------
@@ -144,112 +157,13 @@ class FgdoAnmServer:
         ta = max(now - wu.issued_at, 1e-9)
         prev = self._host_turnaround.get(host_id)
         self._host_turnaround[host_id] = ta if prev is None else 0.7 * prev + 0.3 * ta
-        if self.done:
+        if self.engine.done:
             return
-        if wu.phase_id != self.phase_id:
-            self.stats.stale += 1
-            return
-        self.stats.assimilated += 1
-        if wu.validates is not None:
-            if self.validating and self._validating is not None \
-                    and wu.validates == self._validating[3]:
-                self._votes.append(y)
-                self._check_validation(now)
-            else:
-                self.stats.stale += 1
-            return
-        if self.validating:
-            self.stats.stale += 1    # late line-search result; phase is sealed
-            return
-        self.results.append((wu.point, float(y), wu.alpha, wu.wu_id))
-        m_needed = (self.cfg.m_regression if self.phase == REGRESSION
-                    else self.cfg.m_line_search)
-        if len(self.results) >= m_needed:
-            if self.phase == REGRESSION:
-                self._finish_regression()
-            else:
-                self._finish_line_search(now)
-
-    # -- phase transitions --------------------------------------------------
-
-    def _finish_regression(self):
-        pts = np.stack([r[0] for r in self.results])
-        ys = np.array([r[1] for r in self.results])
-        w = (np.asarray(regression.mad_outlier_weights(jnp.asarray(ys)))
-             if self.cfg.outlier_guard else None)
-        deltas = jnp.asarray(pts - self.center[None, :], jnp.float32)
-        _, g, H = regression.fit_quadratic(
-            deltas, jnp.asarray(ys, jnp.float32),
-            None if w is None else jnp.asarray(w, jnp.float32), self.cfg.ridge)
-        d = regression.newton_direction(g, H, self.cfg.damping)
-        self.direction = np.asarray(d, np.float64)
-        a_lo, a_hi = sampling.clip_alpha_range(
-            jnp.asarray(self.center, jnp.float32), jnp.asarray(d),
-            jnp.asarray(self.lo, jnp.float32), jnp.asarray(self.hi, jnp.float32),
-            self.cfg.alpha_min, self.cfg.alpha_max)
-        self.alpha_range = (float(a_lo), float(a_hi))
-        self._advance_phase(LINESEARCH)
-
-    def _finish_line_search(self, now: float):
-        finite = [(y, pt, a, wid) for pt, y, a, wid in self.results
-                  if np.isfinite(y)]
-        finite.sort(key=lambda r: r[0])
-        self._line_avg = float(np.mean([r[0] for r in finite])) if finite else float("nan")
-        self._candidates = finite
-        self.validating = True
-        self._start_validation(now)
-
-    def _start_validation(self, now: float):
-        if not self._candidates:
-            # nothing usable: shrink step, next iteration from same center
-            self._commit(self.center, self.best_fitness, float("nan"), improved=False)
-            return
-        self._validating = self._candidates.pop(0)
-        self._votes = [self._validating[0]]
-        self._pending_validation_issues = self.quorum
-        self._last_val_issue = now
-        # phase stays LINESEARCH; validation WUs carry validates=wu_id
-
-    def _check_validation(self, now: float):
-        need = self.quorum + 1
-        if len(self._votes) < need:
-            return
-        votes = np.array(self._votes)
-        med = np.median(votes)
-        agree = np.sum(np.abs(votes - med) <= self.vrtol * max(1.0, abs(med)))
-        cand_y, cand_pt, cand_a, _ = self._validating
-        self._validating = None
-        if agree >= (need // 2 + 1) and abs(cand_y - med) <= self.vrtol * max(1.0, abs(med)):
-            improved = med < self.best_fitness - self.cfg.tol
-            self._commit(cand_pt, float(med), cand_a, improved)
-        else:
-            self.stats.validations_failed += 1
-            self.stats.candidates_rejected += 1
-            self._start_validation(now)
-
-    def _commit(self, x_next, f_best, alpha, improved: bool):
-        if improved:
-            self.center = np.asarray(x_next, np.float64)
-            self.best_fitness = f_best
-        else:
-            self.step = self.step * self.cfg.shrink_on_fail
-        self.iteration += 1
-        self.history.append(IterationRecord(
-            iteration=self.iteration, best_fitness=self.best_fitness,
-            avg_line_fitness=getattr(self, "_line_avg", float("nan")),
-            center=self.center.copy(),
-            evals_used=self.stats.assimilated, best_alpha=alpha))
-        if self.iteration >= self.cfg.max_iterations or \
-                (not improved and float(np.max(self.step)) < 1e-12):
-            self.done = True
-        self._advance_phase(REGRESSION)
-
-    def _advance_phase(self, phase: str):
-        self.phase = phase
-        self.phase_id += 1
-        self.results = []
-        self.validating = False
-        self._validating = None
-        self._candidates = []
-        self._votes = []
-        self._pending_validation_issues = 0
+        req = EvalRequest(wu.wu_id, wu.phase_id, wu.point, wu.alpha,
+                          wu.validates)
+        transitions = self.engine.assimilate([EvalResult(req, float(y))])
+        # every new validation round (first candidate or post-rejection
+        # promotion) restarts the reissue-timeout clock, so the reliable-host
+        # gate isn't bypassed by a stale timestamp from the previous round
+        if any(t.kind == "validating" for t in transitions):
+            self._last_val_issue = now

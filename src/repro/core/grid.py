@@ -6,13 +6,19 @@ drives any server exposing generate_work/assimilate — i.e. FgdoAnmServer.
 
 Deterministic given a seed; used by the fault-tolerance tests and the
 scalability benchmark (time-to-solution vs. #hosts, paper §VI discussion).
+
+This simulator evaluates ONE point per Python event, which makes it the
+fidelity reference, not the fast path: at thousands of hosts the run is
+Python-bound.  core/substrates/batched_grid.py advances the same host
+population (via ``sample_hosts``) in vectorized ticks with one batched
+fitness call per tick — use it for scale sweeps (DESIGN.md §3).
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
 import itertools
-from typing import Callable, List, Optional
+from typing import Callable, List, Optional, Tuple
 
 import numpy as np
 
@@ -36,14 +42,22 @@ class GridStats:
     sim_time: float = 0.0
 
 
+def sample_hosts(cfg: GridConfig) -> Tuple[np.ndarray, np.ndarray,
+                                           np.random.Generator]:
+    """Draw the host population (speeds, malicious mask) for a grid config.
+    Shared by the per-event and the batched simulators so a given seed means
+    the same fleet in both."""
+    rng = np.random.default_rng(cfg.seed)
+    speeds = rng.lognormal(0.0, cfg.speed_sigma, cfg.n_hosts)
+    malicious = rng.random(cfg.n_hosts) < cfg.malicious_prob
+    return speeds, malicious, rng
+
+
 class VolunteerGrid:
     def __init__(self, f: Callable[[np.ndarray], float], cfg: GridConfig):
         self.f = f
         self.cfg = cfg
-        rng = np.random.default_rng(cfg.seed)
-        self.speeds = rng.lognormal(0.0, cfg.speed_sigma, cfg.n_hosts)
-        self.malicious = rng.random(cfg.n_hosts) < cfg.malicious_prob
-        self.rng = rng
+        self.speeds, self.malicious, self.rng = sample_hosts(cfg)
         self.stats = GridStats()
 
     def run(self, server, max_events: int = 2_000_000,

@@ -10,7 +10,10 @@ we use the correct triangular layout.
 
 The normal-equations product XᵀX is the compute hot spot at scale
 (m up to ~10⁵, cols = (n²+3n)/2 + 1); kernels/gram.py provides the Pallas
-TPU kernel and this module the pure-jnp path (used when m·cols is small).
+kernel (interpret mode on CPU) and this module the pure-jnp path.
+``fit_quadratic`` routes to the kernel automatically once the design matrix
+crosses ``GRAM_KERNEL_MIN_ELEMENTS`` — so the one dense hot spot uses the
+same code path on every substrate, not only in kernel tests (DESIGN.md §3).
 """
 from __future__ import annotations
 
@@ -18,6 +21,10 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+
+# m·cols threshold above which the fused Pallas XᵀX/Xᵀy kernel is used.
+# Below it the plain jnp matmul wins (kernel launch/interpret overhead).
+GRAM_KERNEL_MIN_ELEMENTS = 32768
 
 
 def n_columns(n: int) -> int:
@@ -55,25 +62,38 @@ def unpack(beta: jax.Array, n: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
 
 
 def fit_quadratic(deltas: jax.Array, ys: jax.Array, weights: jax.Array = None,
-                  ridge: float = 1e-8):
+                  ridge: float = 1e-8, use_kernel: bool = None):
     """Weighted least squares via normal equations (paper eq. 4).
 
     deltas: (m, n); ys: (m,); weights: (m,) — 0 drops a sample, which is how
     failed/unreturned/outlier evaluations are excluded without stalling
-    (the asynchronous robustness property).
+    (the asynchronous robustness property).  Weights must be non-negative
+    (the MAD guard emits a 0/1 mask).
+    ``use_kernel=None`` routes XᵀX/Xᵀy through the Pallas gram kernel when
+    m·cols ≥ GRAM_KERNEL_MIN_ELEMENTS, else uses plain jnp.
     Returns (c, g (n,), H (n,n)).
     """
     m, n = deltas.shape
     x = design_matrix(deltas.astype(jnp.float64) if deltas.dtype == jnp.float64
                       else deltas.astype(jnp.float32))
     y = ys.astype(x.dtype)
-    if weights is not None:
-        w = weights.astype(x.dtype)
-        xw = x * w[:, None]
+    if use_kernel is None:
+        # the kernel accumulates in f32; never auto-route a float64 fit
+        use_kernel = (x.dtype == jnp.float32
+                      and x.shape[0] * x.shape[1] >= GRAM_KERNEL_MIN_ELEMENTS)
+    if use_kernel:
+        from repro.kernels import ops
+        if weights is not None:
+            sw = jnp.sqrt(jnp.maximum(weights.astype(x.dtype), 0.0))
+            gram, rhs = ops.gram(x * sw[:, None], y * sw)
+        else:
+            gram, rhs = ops.gram(x, y)
+        gram = gram.astype(x.dtype)
+        rhs = rhs.astype(x.dtype)
     else:
-        xw = x
-    gram = xw.T @ x                                   # (cols, cols)
-    rhs = xw.T @ y
+        xw = x * weights.astype(x.dtype)[:, None] if weights is not None else x
+        gram = xw.T @ x                               # (cols, cols)
+        rhs = xw.T @ y
     # scale-aware ridge keeps the solve stable when columns differ in magnitude
     diag = jnp.diagonal(gram)
     lam = ridge * jnp.maximum(jnp.max(diag), 1.0)

@@ -1,0 +1,8 @@
+"""Computing substrates that drive the shared ANM engine (DESIGN.md §1).
+
+A substrate owns hosts, time and fitness evaluation; the engine owns every
+optimization decision.  The synchronous driver lives in core/anm.py and the
+BOINC-style asynchronous server in core/fgdo.py for historical import
+stability; new substrates live here.
+"""
+from repro.core.substrates.batched_grid import BatchedVolunteerGrid  # noqa: F401

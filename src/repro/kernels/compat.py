@@ -1,0 +1,22 @@
+"""Version-compat shims for Pallas API drift across jax releases.
+
+jax 0.4.x names the Mosaic params class ``pltpu.TPUCompilerParams``; newer
+releases renamed it to ``pltpu.CompilerParams`` (and some older ones only
+had the dict form).  Every kernel in this package routes through this
+module so the drift is absorbed in exactly one place.
+"""
+from __future__ import annotations
+
+import jax
+from jax.experimental.pallas import tpu as pltpu
+
+# prefer the current name; fall back to the 0.4.x-era one
+CompilerParams = getattr(pltpu, "CompilerParams", None)
+if CompilerParams is None:
+    CompilerParams = pltpu.TPUCompilerParams
+
+
+def interpret_default() -> bool:
+    """The kernels target TPU; on CPU containers they run (and are tested)
+    in interpret mode."""
+    return jax.default_backend() == "cpu"

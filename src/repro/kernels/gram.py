@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import compat
+
 
 def _gram_kernel(x_ref, y_ref, g_ref, r_ref, g_scr, r_scr):
     @pl.when(pl.program_id(0) == 0)
@@ -60,7 +62,7 @@ def gram(x, y, *, block_m: int = 512, interpret: bool = False):
                    jax.ShapeDtypeStruct((c, 1), jnp.float32)],
         scratch_shapes=[pltpu.VMEM((c, c), jnp.float32),
                         pltpu.VMEM((c, 1), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.CompilerParams(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(x, y[:, None])

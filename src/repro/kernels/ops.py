@@ -11,13 +11,12 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import compat
 from repro.kernels import flash_attention as _fa
 from repro.kernels import gram as _gram
 from repro.kernels import wkv6 as _wkv6
 
-
-def _interpret_default() -> bool:
-    return jax.default_backend() == "cpu"
+_interpret_default = compat.interpret_default
 
 
 def _pad_to(x, axis: int, mult: int):

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import compat
+
 
 def _wkv6_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, o_ref, s_scr,
                  *, chunk: int):
@@ -64,7 +66,7 @@ def wkv6(r, k, v, lw, u, *, chunk: int = 256, interpret: bool = False):
         out_specs=time_spec,
         out_shape=jax.ShapeDtypeStruct((b, h, t, kk), r.dtype),
         scratch_shapes=[pltpu.VMEM((kk, kk), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(r, k, v, lw, u)

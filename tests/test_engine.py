@@ -1,0 +1,247 @@
+"""Tests for the unified AnmEngine and its substrates (DESIGN.md §1).
+
+The refactor's contract: one phase machine, three substrates.  These tests
+pin (1) sync/async parity — the synchronous driver and the FGDO adapter
+reach the same optimum from the shared engine; (2) the explicit stale-phase
+and failed-validation paths; (3) the vectorized batched-grid substrate
+(convergence, determinism, actually-batched evaluation); (4) the kernel
+routing of the regression's normal equations.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import regression as reg
+from repro.core.anm import AnmConfig, anm_minimize
+from repro.core.engine import AnmEngine, EvalResult
+from repro.core.fgdo import FgdoAnmServer
+from repro.core.grid import GridConfig, VolunteerGrid
+from repro.core.substrates.batched_grid import BatchedVolunteerGrid
+
+
+def _quad_problem(n=4, seed=0):
+    rng = np.random.default_rng(seed)
+    A = rng.normal(size=(n, n))
+    H = A @ A.T + n * np.eye(n)
+    x_opt = rng.uniform(-0.5, 0.5, n)
+
+    def f(x):
+        d = np.asarray(x, np.float64) - x_opt
+        return float(0.5 * d @ H @ d)
+
+    def f_batch(xs):
+        d = np.asarray(xs, np.float64) - x_opt[None, :]
+        return jnp.asarray(0.5 * np.einsum("mi,ij,mj->m", d, H, d))
+
+    return f, f_batch, x_opt, n
+
+
+def _assimilate_all(engine, reqs, f):
+    return engine.assimilate([EvalResult(r, f(r.point)) for r in reqs])
+
+
+# -- sync/async parity ------------------------------------------------------
+
+def test_sync_and_fgdo_reach_same_center():
+    """Paper's core claim: the state machine is substrate-independent.  On a
+    seeded convex quadratic with a faultless grid, the synchronous driver and
+    the FGDO adapter (both thin layers over AnmEngine) converge to the same
+    center."""
+    f, f_batch, x_opt, n = _quad_problem(seed=42)
+    cfg = AnmConfig(m_regression=80, m_line_search=80, max_iterations=8)
+
+    state = anm_minimize(f_batch, np.ones(n), -10 * np.ones(n),
+                         10 * np.ones(n), 0.5 * np.ones(n), cfg,
+                         key=jax.random.key(0))
+
+    server = FgdoAnmServer(np.ones(n), -10 * np.ones(n), 10 * np.ones(n),
+                           0.5 * np.ones(n), cfg, seed=1)
+    VolunteerGrid(f, GridConfig(n_hosts=32, failure_prob=0.0,
+                                malicious_prob=0.0, seed=2)).run(server)
+
+    c_sync = np.asarray(state.center, np.float64)
+    c_async = server.center
+    np.testing.assert_allclose(c_sync, x_opt, atol=5e-2)
+    np.testing.assert_allclose(c_async, x_opt, atol=5e-2)
+    np.testing.assert_allclose(c_sync, c_async, atol=5e-2)
+    f0 = f(np.ones(n))
+    assert state.best_fitness < 1e-3 * f0
+    assert server.best_fitness < 1e-3 * f0
+
+
+def test_sync_driver_runs_quorum_validation():
+    """Unification gives the synchronous driver the validation path the old
+    standalone implementation lacked: every commit is preceded by quorum
+    re-evaluation of the winning point."""
+    _, f_batch, _, n = _quad_problem(seed=5)
+    hits = {"n": 0}
+
+    def counting(xs):
+        hits["n"] += 1
+        return f_batch(xs)
+
+    cfg = AnmConfig(m_regression=60, m_line_search=60, max_iterations=3)
+    state = anm_minimize(counting, np.ones(n), -10 * np.ones(n),
+                         10 * np.ones(n), 0.5 * np.ones(n), cfg,
+                         key=jax.random.key(3))
+    # per iteration: regression batch + line batch + >=1 quorum batch,
+    # plus the initial f(x0) evaluation
+    assert hits["n"] >= 3 * state.iteration + 1
+    assert state.history, "driver must record committed iterations"
+
+
+# -- explicit stale-phase path ----------------------------------------------
+
+def test_stale_phase_results_are_discarded():
+    f, _, _, n = _quad_problem(seed=1)
+    cfg = AnmConfig(m_regression=40, m_line_search=40, max_iterations=4)
+    engine = AnmEngine(np.ones(n), -10 * np.ones(n), 10 * np.ones(n),
+                       0.5 * np.ones(n), cfg, seed=0)
+    reqs = engine.generate(41)               # one more than the phase needs
+    straggler = reqs[-1]
+    _assimilate_all(engine, reqs[:40], f)    # phase advances at m=40
+    assert engine.phase == "linesearch"
+    buffered = len(engine.results)
+    stale_before = engine.stats.stale
+    _assimilate_all(engine, [straggler], f)  # late arrival from old phase
+    assert engine.stats.stale == stale_before + 1
+    assert len(engine.results) == buffered   # did not leak into the new phase
+    assert engine.phase == "linesearch"
+
+
+# -- explicit failed-validation path ----------------------------------------
+
+def test_failed_validation_rejects_candidate_and_promotes_next():
+    f, _, _, n = _quad_problem(seed=2)
+    cfg = AnmConfig(m_regression=40, m_line_search=40, max_iterations=1)
+    engine = AnmEngine(np.ones(n), -10 * np.ones(n), 10 * np.ones(n),
+                       0.5 * np.ones(n), cfg, seed=0, validation_quorum=2)
+    _assimilate_all(engine, engine.generate(), f)          # regression phase
+    assert engine.phase == "linesearch"
+    reqs = engine.generate()
+    honest = [EvalResult(r, f(r.point)) for r in reqs[:-1]]
+    lie = EvalResult(reqs[-1], -1e6)                       # malicious winner
+    engine.assimilate(honest + [lie])
+    assert engine.validating
+    first_candidate = engine._candidate
+    assert first_candidate[0] == -1e6, "the lie must rank first"
+    # quorum replicas return the TRUTH for the lying point -> rejected
+    while engine.validating and not engine.done:
+        replicas = engine.generate()
+        if not replicas:
+            break
+        _assimilate_all(engine, replicas, f)
+    assert engine.stats.validations_failed >= 1
+    assert engine.stats.candidates_rejected >= 1
+    assert engine.history[-1].best_fitness > -1e5          # lie never committed
+
+
+def test_lost_validation_replicas_can_be_reissued():
+    f, _, _, n = _quad_problem(seed=3)
+    cfg = AnmConfig(m_regression=30, m_line_search=30, max_iterations=1)
+    engine = AnmEngine(np.ones(n), -10 * np.ones(n), 10 * np.ones(n),
+                       0.5 * np.ones(n), cfg, seed=0, validation_quorum=2)
+    _assimilate_all(engine, engine.generate(), f)
+    _assimilate_all(engine, engine.generate(), f)
+    if engine.done:                                        # committed already
+        return
+    assert engine.validating
+    engine.generate()                                      # replicas... lost
+    assert engine.validation_pending == 0
+    assert engine.generate() == []                         # budget exhausted
+    r1, r2 = engine.reissue_validation(), engine.reissue_validation()
+    assert r1 is not None and r2 is not None
+    _assimilate_all(engine, [r1, r2], f)
+    assert engine.done and engine.iteration == 1
+
+
+# -- batched grid substrate --------------------------------------------------
+
+def _run_batched(n_hosts=512, seed=7, **grid_kw):
+    f, f_batch, x_opt, n = _quad_problem(seed=11)
+    cfg = AnmConfig(m_regression=60, m_line_search=60, max_iterations=6)
+    engine = AnmEngine(np.ones(n), -10 * np.ones(n), 10 * np.ones(n),
+                       0.5 * np.ones(n), cfg, seed=seed)
+    calls = {"n": 0, "pts": 0}
+
+    def counting(xs):
+        calls["n"] += 1
+        calls["pts"] += xs.shape[0]
+        return f_batch(xs)
+
+    grid = BatchedVolunteerGrid(
+        counting, GridConfig(n_hosts=n_hosts, seed=3, **grid_kw))
+    stats = grid.run(engine)
+    return engine, stats, calls, f, x_opt, n
+
+
+def test_batched_grid_converges_and_batches():
+    engine, stats, calls, f, x_opt, n = _run_batched(
+        failure_prob=0.05, malicious_prob=0.01)
+    assert engine.done
+    assert engine.best_fitness < 1e-2 * f(np.ones(n))
+    np.testing.assert_allclose(engine.center, x_opt, atol=0.1)
+    # the point of the substrate: many results per fitness call
+    assert calls["pts"] / max(calls["n"], 1) > 8
+    assert stats.batch_calls == calls["n"]
+    assert stats.completed > 0 and stats.failed > 0
+
+
+def test_batched_grid_deterministic():
+    e1, s1, *_ = _run_batched(failure_prob=0.1, malicious_prob=0.02)
+    e2, s2, *_ = _run_batched(failure_prob=0.1, malicious_prob=0.02)
+    assert e1.best_fitness == e2.best_fitness
+    np.testing.assert_array_equal(e1.center, e2.center)
+    assert s1.sim_time == s2.sim_time
+    assert [r.best_fitness for r in e1.history] == \
+        [r.best_fitness for r in e2.history]
+
+
+def test_batched_grid_survives_malice():
+    engine, stats, _, f, _, n = _run_batched(
+        n_hosts=256, failure_prob=0.2, malicious_prob=0.1)
+    assert stats.corrupted > 0
+    assert engine.best_fitness < 5e-2 * f(np.ones(n))
+
+
+# -- kernel-routed normal equations ------------------------------------------
+
+def test_fit_quadratic_kernel_path_matches_jnp():
+    rng = np.random.default_rng(0)
+    n, m = 8, 512
+    A = rng.normal(size=(n, n))
+    H = (A + A.T) / 2
+    g = rng.normal(size=n)
+    d = rng.uniform(-1, 1, (m, n))
+    ys = 1.5 + d @ g + 0.5 * np.einsum("mi,ij,mj->m", d, H, d)
+    w = np.ones(m)
+    w[:7] = 0.0
+    ys[:7] = 1e6                                          # dropped corruption
+    args = (jnp.asarray(d, jnp.float32), jnp.asarray(ys, jnp.float32),
+            jnp.asarray(w, jnp.float32))
+    c_j, g_j, h_j = reg.fit_quadratic(*args, use_kernel=False)
+    c_k, g_k, h_k = reg.fit_quadratic(*args, use_kernel=True)
+    np.testing.assert_allclose(float(c_k), float(c_j), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(g_k), np.asarray(g_j),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(h_k), np.asarray(h_j),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_fit_quadratic_auto_threshold_routes_large_fits():
+    # below threshold -> jnp path; above -> kernel path; both must agree
+    n = 10
+    cols = reg.n_columns(n)
+    big_m = (reg.GRAM_KERNEL_MIN_ELEMENTS // cols) + 1
+    rng = np.random.default_rng(1)
+    d = rng.uniform(-1, 1, (big_m, n))
+    ys = np.sum(d * d, axis=1)
+    c_auto, g_auto, h_auto = reg.fit_quadratic(
+        jnp.asarray(d, jnp.float32), jnp.asarray(ys, jnp.float32))
+    c_ref, g_ref, h_ref = reg.fit_quadratic(
+        jnp.asarray(d, jnp.float32), jnp.asarray(ys, jnp.float32),
+        use_kernel=False)
+    np.testing.assert_allclose(np.asarray(g_auto), np.asarray(g_ref),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(h_auto), np.asarray(h_ref),
+                               rtol=1e-3, atol=1e-3)
