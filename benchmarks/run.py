@@ -3,8 +3,9 @@
 Prints ``name,us_per_call,derived`` CSV.  ``python -m benchmarks.run``.
 
 ``--smoke`` runs a CI-sized subset (currently the scalability module's
-substrate shootout) so perf regressions in the batched grid substrate are
-caught on every push without paying for the full sweeps.
+substrate shootout, including the pod-mesh parity and sharding-overhead
+gates) so regressions in the batched grid substrate and its evaluation
+backends are caught on every push without paying for the full sweeps.
 """
 from __future__ import annotations
 

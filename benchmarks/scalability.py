@@ -6,11 +6,27 @@ point: the asynchronous method keeps scaling because every phase accepts any
 m results; the sequential baselines cannot use more than 2n hosts.
 
 Since the engine refactor this module also measures REAL wall-clock of the
-two grid substrates driving the same ``AnmEngine`` workload: the per-event
+grid substrates driving the same ``AnmEngine`` workload: the per-event
 simulator (one Python event + one fitness dispatch per result) against the
 vectorized batched grid (one jitted ``f_batch`` per tick) at 4096 hosts —
-the acceptance target is a ≥5× speedup.  ``--smoke`` (or ``run.py --smoke``)
-runs a down-scaled version of just that comparison for CI.
+the acceptance target is a ≥5× speedup.  A third row drives the batched
+grid through the shard_map pod-mesh backend (DESIGN.md §6) at 8× the
+batched row's ``m``.  Pod-mesh gates:
+
+  (a) parity — at equal ``m`` and engine seed the pod-mesh backend must
+      commit bit-identical iterates to the in-process backend;
+  (b) wall-clock — at 8× ``m`` the pod-mesh row must stay within 2× the
+      wall-clock of the in-process backend running the SAME 8× workload
+      (same seed and tick structure, so the two trajectories are
+      bit-identical and the delta is purely what sharding adds).  The
+      economics of the m-scaling itself (pod row at 8×m vs the batched
+      row at m) are reported alongside; on parallel hardware the sharded
+      buckets absorb the extra samples, on a 1–2-core CI runner the 8×
+      fitness FLOPs are serialized, so that number is informative, not a
+      gate.
+
+``--smoke`` (or ``run.py --smoke``) runs a down-scaled version of those
+gates for CI.
 """
 from __future__ import annotations
 
@@ -23,21 +39,27 @@ import numpy as np
 
 from benchmarks.common import emit
 from repro.core.anm import AnmConfig
-from repro.core.engine import AnmEngine
+from repro.core.engine import AnmEngine, identical_trajectories
 from repro.core.fgdo import FgdoAnmServer
 from repro.core.grid import GridConfig, VolunteerGrid
 from repro.core.substrates.batched_grid import BatchedVolunteerGrid
+from repro.core.substrates.pod_mesh import PodMeshEvalBackend
 from repro.data import sdss
 import jax.numpy as jnp
 
 OUT = os.path.join(os.path.dirname(__file__), "..", "artifacts", "benchmarks")
 
 
+POD_M_SCALE = 8                       # pod-mesh row runs at 8x the batched m
+
+
 def _substrate_shootout(n_hosts: int, n_stars: int, m: int, iters: int):
-    """Same engine config, same host population seed, two substrates.
-    Each side runs once untimed (jit warmup at its real shapes, like
-    ``common.time_fn``) and once timed.  Returns
-    (event_row, batched_row, speedup)."""
+    """Same engine config, same host population seed, three substrates:
+    per-event, batched (in-process backend), and batched through the
+    shard_map pod-mesh backend at ``POD_M_SCALE × m``.  Each side runs once
+    untimed (jit warmup at its real shapes, like ``common.time_fn``) and
+    once timed.  Returns (event_row, batched_row, pod_row, speedup,
+    pod_parity_ok, pod_sharding_overhead, pod_econ_ratio)."""
     stripe = sdss.make_stripe("shootout", n_stars=n_stars, seed=29)
     f_batch, f_single = sdss.make_fitness(stripe)
     fnp = lambda p: float(f_single(jnp.asarray(p, jnp.float32)))
@@ -53,10 +75,15 @@ def _substrate_shootout(n_hosts: int, n_stars: int, m: int, iters: int):
                                anm_cfg, seed=7)
         return server, VolunteerGrid(fnp, grid_cfg).run(server)
 
-    def run_batched():
+    def run_batched(mm: int = m, backend=None, tick_batch=None):
+        cfg_mm = (anm_cfg if mm == m else
+                  AnmConfig(m_regression=mm, m_line_search=mm,
+                            max_iterations=iters))
         engine = AnmEngine(x0, sdss.LO, sdss.HI, sdss.DEFAULT_STEP,
-                           anm_cfg, seed=7)
-        return engine, BatchedVolunteerGrid(f_batch, grid_cfg).run(engine)
+                           cfg_mm, seed=7)
+        return engine, BatchedVolunteerGrid(
+            f_batch, grid_cfg, tick_batch=tick_batch,
+            backend=backend).run(engine)
 
     # warmup: compile everything both sides share (f_single dispatch path,
     # the engine's fit_quadratic/eigh/clip jits — same shapes since m is the
@@ -76,6 +103,32 @@ def _substrate_shootout(n_hosts: int, n_stars: int, m: int, iters: int):
     engine, bt_stats = run_batched()
     t_batched = time.perf_counter() - t0
 
+    # pod-mesh backend: parity gate at equal m (same seed => bit-identical
+    # committed iterates)
+    pod_backend = PodMeshEvalBackend(f_batch)
+    e_par, _ = run_batched(backend=pod_backend)
+    pod_parity_ok = identical_trajectories(engine, e_par)
+
+    # the 8x-m rows drain much larger tick horizons (tick_batch n_hosts/2
+    # instead of the default n_hosts/16): one bucket evaluation per tick
+    # costs ~the same whatever its width, so serializing the 8x workload
+    # into 8x as many small ticks would waste exactly the latency the mesh
+    # exists to absorb.  Both backends run the SAME 8x workload (identical
+    # seed and tick structure => identical trajectories), so their
+    # wall-clock delta is purely what shard_map adds.
+    m_pod = POD_M_SCALE * m
+    pod_tick = n_hosts // 2
+    run_batched(m_pod, tick_batch=pod_tick)
+    t0 = time.perf_counter()
+    e_ref, rf_stats = run_batched(m_pod, tick_batch=pod_tick)
+    t_ref = time.perf_counter() - t0
+    run_batched(m_pod, backend=pod_backend, tick_batch=pod_tick)
+    t0 = time.perf_counter()
+    e_pod, pd_stats = run_batched(m_pod, backend=pod_backend,
+                                  tick_batch=pod_tick)
+    t_pod = time.perf_counter() - t0
+    pod_parity_ok = pod_parity_ok and identical_trajectories(e_ref, e_pod)
+
     event_row = {"substrate": "per_event", "wall_s": t_event,
                  "sim_time_s": ev_stats.sim_time, "final": server.best_fitness,
                  "iterations": server.iteration,
@@ -89,7 +142,22 @@ def _substrate_shootout(n_hosts: int, n_stars: int, m: int, iters: int):
                    "batch_calls": bt_stats.batch_calls,
                    "mean_batch": (bt_stats.batched_evals
                                   / max(bt_stats.batch_calls, 1))}
-    return event_row, batched_row, t_event / max(t_batched, 1e-9)
+    pod_row = {"substrate": "pod_mesh_batched", "m": m_pod,
+               "data_shards": pod_backend.n_shards,
+               "wall_s": t_pod,
+               "in_process_at_8m_wall_s": t_ref,
+               "sim_time_s": pd_stats.sim_time,
+               "final": e_pod.best_fitness, "iterations": e_pod.iteration,
+               "completed": pd_stats.completed, "ticks": pd_stats.ticks,
+               "batch_calls": pd_stats.batch_calls,
+               "evaluated": pd_stats.batched_evals,
+               "mean_batch": (pd_stats.batched_evals
+                              / max(pd_stats.batch_calls, 1)),
+               "parity_ok": pod_parity_ok}
+    return (event_row, batched_row, pod_row,
+            t_event / max(t_batched, 1e-9), pod_parity_ok,
+            t_pod / max(t_ref, 1e-9),      # sharding overhead (gated <= 2x)
+            t_pod / max(t_batched, 1e-9))  # m-scaling economics (reported)
 
 
 def run(out_dir=None, n_stars=8_000, smoke: bool = False):
@@ -137,34 +205,58 @@ def run(out_dir=None, n_stars=8_000, smoke: bool = False):
                  f"final={server.best_fitness:.5f};"
                  f"val_rejects={server.stats.validations_failed}")
 
-    # -- substrate shootout: per-event vs batched grid, same engine ----------
+    # -- substrate shootout: per-event vs batched vs pod-mesh-batched --------
     if smoke:
         n_hosts, ss_stars, m, iters = 1024, 2_000, 64, 1
     else:
         n_hosts, ss_stars, m, iters = 4096, 2_000, 64, 2
-    ev, bt, speedup = _substrate_shootout(n_hosts, ss_stars, m, iters)
+    ev, bt, pod, speedup, pod_parity_ok, pod_overhead, pod_econ = \
+        _substrate_shootout(n_hosts, ss_stars, m, iters)
     results["substrate_shootout"] = {
         "n_hosts": n_hosts, "per_event": ev, "batched": bt,
-        "speedup": speedup}
+        "pod_mesh_batched": pod, "speedup": speedup,
+        "pod_sharding_overhead": pod_overhead,
+        "pod_vs_batched_m_wall_ratio": pod_econ}
     emit(f"scal_substrate_event_{n_hosts}", ev["wall_s"] * 1e6,
          f"final={ev['final']:.5f};completed={ev['completed']}")
     emit(f"scal_substrate_batched_{n_hosts}", bt["wall_s"] * 1e6,
          f"final={bt['final']:.5f};completed={bt['completed']};"
          f"mean_batch={bt['mean_batch']:.0f}")
+    emit(f"scal_substrate_podmesh_{n_hosts}", pod["wall_s"] * 1e6,
+         f"m={pod['m']};final={pod['final']:.5f};"
+         f"shards={pod['data_shards']};mean_batch={pod['mean_batch']:.0f};"
+         f"parity={'ok' if pod_parity_ok else 'FAIL'}")
     emit(f"scal_substrate_speedup_{n_hosts}", speedup,
          f"target>=5x;event_s={ev['wall_s']:.1f};batched_s={bt['wall_s']:.2f}")
+    emit(f"scal_substrate_pod_overhead_{n_hosts}", pod_overhead,
+         f"target<=2x_vs_in_process_at_{POD_M_SCALE}x_m;"
+         f"pod_s={pod['wall_s']:.2f};ref_s={pod['in_process_at_8m_wall_s']:.2f}")
+    emit(f"scal_substrate_pod_econ_{n_hosts}", pod_econ,
+         f"info_{POD_M_SCALE}x_m_vs_batched_m;pod_s={pod['wall_s']:.2f};"
+         f"batched_s={bt['wall_s']:.2f}")
 
     with open(os.path.join(out_dir, "scalability.json"), "w") as f:
         json.dump(results, f, indent=2)
-    # the canary must be able to FAIL: gate the speedup so the CI smoke job
-    # goes red when the batched substrate regresses (lower bar in smoke —
-    # shared CI runners are noisy; the full acceptance target is 5x)
+    # the canaries must be able to FAIL: gate speedup, pod-mesh parity and
+    # the pod-mesh sharding overhead so the CI smoke job goes red when a
+    # substrate regresses (lower speedup bar in smoke — shared CI runners
+    # are noisy; the full acceptance target is 5x)
+    if not pod_parity_ok:
+        raise RuntimeError(
+            "pod-mesh backend diverged from the in-process backend at the "
+            "same seed — committed iterates must be bit-identical")
     min_speedup = 3.0 if smoke else 5.0
     if speedup < min_speedup:
         raise RuntimeError(
             f"batched-grid speedup {speedup:.2f}x below the "
             f"{min_speedup:.0f}x floor (event {ev['wall_s']:.2f}s vs "
             f"batched {bt['wall_s']:.2f}s at {n_hosts} hosts)")
+    if pod_overhead > 2.0:
+        raise RuntimeError(
+            f"pod-mesh backend at {POD_M_SCALE}x m took {pod_overhead:.2f}x "
+            f"the in-process backend on the same workload (pod "
+            f"{pod['wall_s']:.2f}s vs {pod['in_process_at_8m_wall_s']:.2f}s) "
+            f"— sharding overhead above the 2x ceiling")
     return results
 
 

@@ -19,7 +19,7 @@ import numpy as np
 
 from repro.configs import paper_anm
 from repro.core.anm import AnmConfig
-from repro.core.engine import AnmEngine
+from repro.core.engine import AnmEngine, identical_trajectories
 from repro.core.fgdo import FgdoAnmServer
 from repro.core.grid import GridConfig, VolunteerGrid
 from repro.core.substrates.batched_grid import BatchedVolunteerGrid
@@ -74,6 +74,27 @@ def main():
           f"simulated hours — {bstats.batch_calls} fitness batches "
           f"(mean {bstats.batched_evals / max(bstats.batch_calls, 1):.0f} "
           f"points each), {wall:.1f}s wall")
+
+    # -- act 3: the same grid, buckets shard_mapped over the pod mesh --------
+    # (DESIGN.md §6 — on this CPU the mesh degenerates to the available
+    # devices; run under repro.launch.dryrun --substrate pod_mesh for the
+    # real 16x16 partitioning.  Same seed => bit-identical iterates.)
+    from repro.core.substrates.pod_mesh import PodMeshEvalBackend
+    engine2 = AnmEngine(x0, sdss.LO, sdss.HI, sdss.DEFAULT_STEP,
+                        AnmConfig(m_regression=128, m_line_search=128,
+                                  max_iterations=8),
+                        seed=3, validation_quorum=pc.validation_quorum)
+    pod = PodMeshEvalBackend(f_batch)
+    BatchedVolunteerGrid(
+        f_batch, GridConfig(n_hosts=4096, base_eval_time=3600.0,
+                            speed_sigma=1.0, failure_prob=0.1,
+                            malicious_prob=0.03, seed=5),
+        backend=pod).run(engine2)
+    identical = identical_trajectories(engine, engine2)
+    print(f"pod-mesh backend ({pod.n_shards} data shards): "
+          f"{engine2.best_fitness:.5f} — iterates "
+          f"{'bit-identical to' if identical else 'DIVERGED from'} "
+          f"the in-process backend")
 
 
 if __name__ == "__main__":

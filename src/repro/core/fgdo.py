@@ -7,10 +7,12 @@ What remains here is the BOINC-shaped substrate adapter —
   * workunit ids and the outstanding-work table,
   * stale filtering (the engine discards by phase id; this layer merely
     carries it through the WorkUnit),
-  * per-host turnaround tracking and reliable-host scheduling: validation
-    replicas, which gate the next iteration, go only to hosts with
-    below-median observed turnaround so one slow volunteer can't stall
-    the search,
+  * per-host turnaround AND return-rate tracking for reliable-host
+    scheduling: validation replicas, which gate the next iteration, go
+    only to hosts with below-median observed turnaround that actually
+    return the work they take — a fast host that vanishes with its
+    results records no turnaround at all, so turnaround alone would keep
+    it "reliable" forever,
   * a reissue timeout for validation replicas lost to vanished hosts.
 
 Semantics reproduced from the paper:
@@ -53,15 +55,20 @@ class FgdoAnmServer:
     def __init__(self, x0, lo, hi, step, cfg: AnmConfig = AnmConfig(),
                  seed: int = 0, validation_quorum: int = 2,
                  validation_rtol: float = 1e-6,
-                 val_reissue_timeout: float = 600.0):
+                 val_reissue_timeout: float = 600.0,
+                 min_return_rate: float = 0.5, min_issued_for_rate: int = 4):
         self.engine = AnmEngine(x0, lo, hi, step, cfg, seed=seed,
                                 validation_quorum=validation_quorum,
                                 validation_rtol=validation_rtol)
         self.cfg = cfg
         self.val_reissue_timeout = val_reissue_timeout
+        self.min_return_rate = min_return_rate
+        self.min_issued_for_rate = min_issued_for_rate
         self._last_val_issue = 0.0
         self.outstanding: Dict[int, WorkUnit] = {}
         self._host_turnaround: Dict[int, float] = {}
+        self._host_issued: Dict[int, int] = {}
+        self._host_returned: Dict[int, int] = {}
 
     # -- engine views (back-compat surface) ---------------------------------
 
@@ -87,9 +94,13 @@ class FgdoAnmServer:
 
     @property
     def phase(self) -> str:
-        # validation is the tail of the line-search phase in BOINC terms
+        # validation is the tail of the phase that produced the candidate:
+        # the f(x0) probe's quorum round still reads as "bootstrap", any
+        # other validation as the line-search tail (BOINC terms)
         p = self.engine.phase
-        return LINESEARCH if p == VALIDATING else p
+        if p == VALIDATING:
+            return "bootstrap" if self.engine.bootstrapping else LINESEARCH
+        return p
 
     @property
     def validating(self) -> bool:
@@ -113,7 +124,20 @@ class FgdoAnmServer:
 
     # -- reliable-host scheduling -------------------------------------------
 
+    def _host_returns(self, host_id: int) -> bool:
+        """Return-rate gate: a host that takes work and vanishes never
+        records a turnaround, so turnaround alone is failure-blind — judge
+        it by what it RETURNS.  Never bypassed, not even by the reissue
+        timeout: handing a latency-critical replica to a known black hole
+        guarantees another loss."""
+        issued = self._host_issued.get(host_id, 0)
+        return not (issued >= self.min_issued_for_rate and
+                    self._host_returned.get(host_id, 0) <
+                    self.min_return_rate * issued)
+
     def _host_reliable(self, host_id: int) -> bool:
+        if not self._host_returns(host_id):
+            return False
         t = self._host_turnaround.get(host_id)
         if t is None or len(self._host_turnaround) < 4:
             return True              # unknown hosts get the benefit of doubt
@@ -128,8 +152,15 @@ class FgdoAnmServer:
             return None
         if eng.validating:
             timed_out = now - self._last_val_issue > self.val_reissue_timeout
+            # liveness escape: if even the return-rate gate has starved the
+            # quorum for 2x the reissue timeout, hand work to anyone — on a
+            # fleet where EVERY host drops most work, refusing forever
+            # would deadlock the validation instead of merely retrying
+            starving = now - self._last_val_issue > 2 * self.val_reissue_timeout
             if eng.validation_pending <= 0 and not timed_out:
                 return None          # quorum already issued; host retries later
+            if not self._host_returns(host_id) and not starving:
+                return None          # black holes never get validation work
             if not self._host_reliable(host_id) and not timed_out:
                 return None          # latency-critical WU: reliable hosts only
             if eng.validation_pending > 0:
@@ -140,6 +171,17 @@ class FgdoAnmServer:
                 return None
             self._last_val_issue = now
         else:
+            if eng.phase == "bootstrap":
+                # the f(x0) probe is identical for every host: keep ~2
+                # copies in flight (straggler/loss slack, like the batched
+                # grid's overcommit) instead of handing one to each of
+                # n_hosts; probes older than the reissue timeout count as
+                # lost so a dropped probe can't stall the start forever
+                live = sum(1 for wu in self.outstanding.values()
+                           if wu.phase_id == eng.phase_id and
+                           now - wu.issued_at <= self.val_reissue_timeout)
+                if live >= 2:
+                    return None
             reqs = eng.generate(1)
             if not reqs:
                 return None
@@ -147,13 +189,15 @@ class FgdoAnmServer:
         wu = WorkUnit(req.ticket, req.phase_id, np.asarray(req.point),
                       req.alpha, req.validates, issued_at=now)
         self.outstanding[wu.wu_id] = wu
+        self._host_issued[host_id] = self._host_issued.get(host_id, 0) + 1
         return wu
 
     # -- assimilation -------------------------------------------------------
 
     def assimilate(self, wu: WorkUnit, y: float, host_id: int, now: float):
         self.outstanding.pop(wu.wu_id, None)
-        # track per-host turnaround for reliable-host scheduling
+        # track per-host return rate + turnaround for reliable-host scheduling
+        self._host_returned[host_id] = self._host_returned.get(host_id, 0) + 1
         ta = max(now - wu.issued_at, 1e-9)
         prev = self._host_turnaround.get(host_id)
         self._host_turnaround[host_id] = ta if prev is None else 0.7 * prev + 0.3 * ta

@@ -53,6 +53,20 @@ def sample_hosts(cfg: GridConfig) -> Tuple[np.ndarray, np.ndarray,
     return speeds, malicious, rng
 
 
+def malicious_lie(y, u):
+    """Sign-safe corrupted fitness shared by both grid simulators.
+
+    Fitness is minimized, so a malicious host "wins" by under-reporting.
+    The additive margin is scaled to ``|y| + 1`` so the lie beats the truth
+    by at least ``0.2 * (|y| + 1)`` for ``u`` drawn in [0.2, 0.8] — unlike a
+    multiplicative ``y * u``, which only fakes an improvement when ``y > 0``
+    and silently becomes harmless (or self-defeating) for the negative or
+    near-zero fitness values that dominate close to an optimum.
+    """
+    y = np.asarray(y, np.float64)
+    return y - (np.abs(y) + 1.0) * u
+
+
 class VolunteerGrid:
     def __init__(self, f: Callable[[np.ndarray], float], cfg: GridConfig):
         self.f = f
@@ -97,7 +111,7 @@ class VolunteerGrid:
                 wu = payload
                 y = float(self.f(wu.point))
                 if self.malicious[host]:
-                    y = y * float(rng.uniform(0.2, 0.8))  # plausible-looking lie
+                    y = float(malicious_lie(y, rng.uniform(0.2, 0.8)))
                     self.stats.corrupted += 1
                 server.assimilate(wu, y, host, now)
                 self.stats.completed += 1

@@ -101,6 +101,22 @@ def fit_quadratic(deltas: jax.Array, ys: jax.Array, weights: jax.Array = None,
     return unpack(beta, n)
 
 
+def fit_quadratic_robust(deltas: jax.Array, ys: jax.Array,
+                         ridge: float = 1e-8, use_kernel: bool = None):
+    """Two-pass robust fit: value-MAD guard -> fit -> residual-MAD guard ->
+    refit.  A malicious fitness that stays inside the natural spread of the
+    sampling box (e.g. the sign-safe lie ``y - (|y|+1)·u``) passes a MAD
+    test on raw values, but sits far off the local quadratic surface — the
+    residual pass catches exactly those.  Weights are 0/1 masks, so a clean
+    sample set refits to the identical surrogate."""
+    w = mad_outlier_weights(ys)
+    c, g, H = fit_quadratic(deltas, ys, w, ridge, use_kernel)
+    pred = c + deltas @ g + \
+        0.5 * jnp.einsum("mi,ij,mj->m", deltas, H, deltas)
+    w2 = w * mad_outlier_weights(ys - pred)
+    return fit_quadratic(deltas, ys, w2, ridge, use_kernel)
+
+
 def mad_outlier_weights(ys: jax.Array, k: float = 8.0) -> jax.Array:
     """Median-absolute-deviation outlier mask — drops malicious/corrupt fitness
     values before the fit (robustness guard; see DESIGN.md §2)."""

@@ -4,5 +4,13 @@ A substrate owns hosts, time and fitness evaluation; the engine owns every
 optimization decision.  The synchronous driver lives in core/anm.py and the
 BOINC-style asynchronous server in core/fgdo.py for historical import
 stability; new substrates live here.
+
+WHERE a substrate evaluates its workunit blocks is a second, orthogonal
+seam — ``EvalBackend`` (DESIGN.md §6): in-process on the local device by
+default, or shard_mapped over the production pod mesh
+(``pod_mesh.PodMeshEvalBackend``).
 """
 from repro.core.substrates.batched_grid import BatchedVolunteerGrid  # noqa: F401
+from repro.core.substrates.eval_backend import (  # noqa: F401
+    EvalBackend, InProcessEvalBackend)
+from repro.core.substrates.pod_mesh import PodMeshEvalBackend  # noqa: F401

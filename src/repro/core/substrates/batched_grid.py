@@ -16,12 +16,13 @@ exactly as on the per-event grid (DESIGN.md §3).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional
+from typing import Callable, Optional
 
 import numpy as np
 
-from repro.core.engine import AnmEngine, EvalRequest, EvalResult
-from repro.core.grid import GridConfig, GridStats, sample_hosts
+from repro.core.engine import AnmEngine
+from repro.core.grid import GridConfig, GridStats, malicious_lie, sample_hosts
+from repro.core.substrates.eval_backend import EvalBackend, InProcessEvalBackend
 
 
 @dataclasses.dataclass
@@ -38,6 +39,12 @@ class BatchedVolunteerGrid:
     many completions are drained per tick (default: n_hosts/16, ≥ 1) — the
     per-event simulator corresponds to tick_batch=1.
 
+    WHERE a tick's block is evaluated is a pluggable ``EvalBackend``
+    (DESIGN.md §6): the default wraps ``f_batch`` in-process; pass
+    ``backend=PodMeshEvalBackend(f_batch)`` to shard_map each bucket over
+    the pod mesh instead — the committed iterates are bit-identical either
+    way at a given engine seed.
+
     Unlike the per-event simulator, which hands work to every requesting
     host, this substrate throttles issuance to ``engine.wanted() ×
     overcommit`` outstanding current-phase workunits: a phase that needs m
@@ -45,9 +52,14 @@ class BatchedVolunteerGrid:
     fleet size stops multiplying evaluation cost.
     """
 
-    def __init__(self, f_batch: Callable, cfg: GridConfig,
-                 tick_batch: Optional[int] = None, overcommit: float = 2.0):
-        self.f_batch = f_batch
+    def __init__(self, f_batch: Optional[Callable], cfg: GridConfig,
+                 tick_batch: Optional[int] = None, overcommit: float = 2.0,
+                 backend: Optional[EvalBackend] = None):
+        if backend is None:
+            if f_batch is None:
+                raise ValueError("need f_batch or an explicit backend")
+            backend = InProcessEvalBackend(f_batch)
+        self.backend = backend
         self.cfg = cfg
         self.speeds, self.malicious, self.rng = sample_hosts(cfg)
         self.tick_batch = tick_batch or max(1, cfg.n_hosts // 16)
@@ -55,17 +67,11 @@ class BatchedVolunteerGrid:
         self.stats = BatchedGridStats()
 
     def _eval_padded(self, pts: np.ndarray) -> np.ndarray:
-        """Evaluate a (k, n) block, padding k to the next power of two so the
-        jitted f_batch sees few distinct shapes."""
-        import jax.numpy as jnp
-        k = pts.shape[0]
-        kp = 1 << max(3, (k - 1).bit_length())
-        if kp != k:
-            pts = np.concatenate([pts, np.repeat(pts[-1:], kp - k, axis=0)])
-        ys = np.asarray(self.f_batch(jnp.asarray(pts, jnp.float32)),
-                        np.float64)
+        """Evaluate a (k, n) block through the backend (which pads k to its
+        bucket shape, so the jitted path sees few distinct shapes)."""
+        ys = self.backend(pts)
         self.stats.batch_calls += 1
-        return ys[:k]
+        return ys
 
     def run(self, engine: AnmEngine, max_ticks: int = 1_000_000,
             max_sim_time: float = float("inf")) -> BatchedGridStats:
@@ -76,10 +82,32 @@ class BatchedVolunteerGrid:
         lost = np.zeros(n, bool)      # host took work but will drop the result
         t_done = np.full(n, np.inf)
         req_phase = np.full(n, -1)    # phase_id of the workunit a host holds
-        assigned: List[Optional[EvalRequest]] = [None] * n
+        # assignment is held in ARRAYS, not request objects — paired with
+        # the engine's generate_block/assimilate_arrays fast path so a tick
+        # moving thousands of results costs array ops, not object churn
+        a_ticket = np.full(n, -1, np.int64)
+        a_validates = np.full(n, -1, np.int64)
+        a_alpha = np.full(n, np.nan)
+        a_point = np.zeros((n, engine.n))
         now = 0.0
         # hosts come online staggered, like the per-event simulator
         online = rng.uniform(0, cfg.base_eval_time / 10, n)
+
+        def issue(hosts, tickets, phase_id, pts, alphas, validates):
+            k = hosts.size
+            dt = cfg.base_eval_time / self.speeds[hosts] \
+                * rng.uniform(0.8, 1.2, k)
+            fail = rng.random(k) < cfg.failure_prob
+            self.stats.failed += int(fail.sum())
+            busy[hosts] = True
+            lost[hosts] = fail
+            # a vanishing host re-requests much later (4x the eval)
+            t_done[hosts] = now + np.where(fail, 4 * dt, dt)
+            req_phase[hosts] = phase_id
+            a_ticket[hosts] = tickets
+            a_validates[hosts] = validates
+            a_alpha[hosts] = alphas
+            a_point[hosts] = pts
 
         while not engine.done and self.stats.ticks < max_ticks \
                 and now <= max_sim_time:
@@ -88,26 +116,23 @@ class BatchedVolunteerGrid:
                 in_flight = int(np.sum(busy & (req_phase == engine.phase_id)))
                 cap = int(np.ceil(engine.wanted() * self.overcommit))
                 k_ask = min(int(idle.size), max(cap - in_flight, 0))
-                reqs = engine.generate(k_ask) if k_ask else []
-                if not reqs and engine.validating and in_flight == 0:
-                    # every pending quorum replica was lost in flight: the
-                    # substrate must reissue or the run would deadlock
-                    r = engine.reissue_validation()
-                    reqs = [r] if r is not None else []
-                if reqs:
-                    hosts = idle[:len(reqs)]
-                    k = hosts.size
-                    dt = cfg.base_eval_time / self.speeds[hosts] \
-                        * rng.uniform(0.8, 1.2, k)
-                    fail = rng.random(k) < cfg.failure_prob
-                    self.stats.failed += int(fail.sum())
-                    busy[hosts] = True
-                    lost[hosts] = fail
-                    # a vanishing host re-requests much later (4x the eval)
-                    t_done[hosts] = now + np.where(fail, 4 * dt, dt)
-                    req_phase[hosts] = [r.phase_id for r in reqs]
-                    for h, r in zip(hosts, reqs):
-                        assigned[h] = r
+                block = engine.generate_block(k_ask) if k_ask else None
+                if block is not None:
+                    tickets, phase_id, pts, alphas = block
+                    issue(idle[:len(tickets)], tickets, phase_id, pts,
+                          alphas, -1)
+                elif k_ask or engine.validating:
+                    # bootstrap probes and quorum replicas are handed out as
+                    # objects (tiny phases); reissue a replica if every
+                    # pending one was lost in flight, or the run deadlocks
+                    reqs = engine.generate(k_ask) if k_ask else []
+                    if not reqs and engine.validating and in_flight == 0:
+                        r = engine.reissue_validation()
+                        reqs = [r] if r is not None else []
+                    for h, r in zip(idle, reqs):
+                        issue(np.array([h]), r.ticket, r.phase_id,
+                              r.point, r.alpha,
+                              -1 if r.validates is None else r.validates)
             if not busy.any():
                 now += cfg.idle_retry
                 continue
@@ -120,8 +145,20 @@ class BatchedVolunteerGrid:
             # wait on stragglers the paper's any-m semantics exist to ignore.
             busy_idx = np.flatnonzero(busy)
             cur = busy_idx[req_phase[busy_idx] == engine.phase_id]
-            want = engine.wanted()
-            pool = cur if cur.size else busy_idx
+            # while validating, the phase needs the full outstanding quorum
+            # (wanted() is 0 once replicas are handed out) — jump to the
+            # last missing vote in ONE tick instead of draining one replica
+            # per tick
+            want = (engine.validation_votes_outstanding if engine.validating
+                    else engine.wanted())
+            # the horizon counts LIVE completions: a host that will drop its
+            # result can't contribute the k-th arrival the phase is waiting
+            # for, and the simulator already knows the drop (it drew it at
+            # issuance) — server-visible behavior is identical, the tick
+            # just stops splitting a phase's drain on phantom arrivals
+            cur_live = cur[~lost[cur]]
+            pool = (cur_live if cur_live.size
+                    else (cur if cur.size else busy_idx))
             kth = min(pool.size, self.tick_batch, want if want > 0 else 1)
             horizon = np.partition(t_done[pool], kth - 1)[kth - 1]
             now = float(horizon)
@@ -130,25 +167,37 @@ class BatchedVolunteerGrid:
 
             delivered = ready[~lost[ready]]
             if delivered.size:
-                pts = np.stack([assigned[h].point for h in delivered])
-                ys = self._eval_padded(pts)
-                mal = self.malicious[delivered]
-                if mal.any():
-                    # plausible-looking lie, same distribution as the
-                    # per-event simulator's corruption model
-                    ys[mal] = ys[mal] * rng.uniform(0.2, 0.8, int(mal.sum()))
-                    self.stats.corrupted += int(mal.sum())
-                engine.assimilate(
-                    [EvalResult(assigned[h], float(y))
-                     for h, y in zip(delivered, ys)])
+                # pay f_batch only for results the engine can still use:
+                # workunits from an already-finished phase are provably
+                # discarded by the engine's phase_id check BEFORE it reads
+                # y, so stale lanes are delivered with NaN instead of an
+                # evaluation — the engine's decisions and stale counts are
+                # identical, the wasted fitness work is not
+                live_mask = req_phase[delivered] == engine.phase_id
+                ys = np.full(delivered.size, np.nan)
+                live = delivered[live_mask]
+                if live.size:
+                    ys_live = self._eval_padded(a_point[live])
+                    mal = self.malicious[live]
+                    if mal.any():
+                        # same sign-safe corruption model as the per-event
+                        # simulator (grid.malicious_lie)
+                        ys_live[mal] = malicious_lie(
+                            ys_live[mal], rng.uniform(0.2, 0.8, int(mal.sum())))
+                        self.stats.corrupted += int(mal.sum())
+                    ys[live_mask] = ys_live
+                engine.assimilate_arrays(
+                    req_phase[delivered], a_ticket[delivered],
+                    a_point[delivered], a_alpha[delivered],
+                    a_validates[delivered], ys)
                 self.stats.completed += int(delivered.size)
-                self.stats.batched_evals += int(delivered.size)
+                self.stats.batched_evals += int(live.size)
             busy[ready] = False
             lost[ready] = False
             t_done[ready] = np.inf
             req_phase[ready] = -1
-            for h in ready:
-                assigned[h] = None
+            a_ticket[ready] = -1
+            a_validates[ready] = -1
             self.stats.ticks += 1
         self.stats.sim_time = now
         return self.stats

@@ -1,0 +1,75 @@
+"""Evaluation backends for the batched-grid substrate (DESIGN.md §6).
+
+The batched grid decides WHICH points a tick evaluates; a backend decides
+HOW that block of points turns into fitness values.  The seam is one call:
+
+    ys = backend(pts)          # (k, n) float block -> (k,) float64
+
+Every backend pads ``k`` up to a fixed power-of-two bucket before
+evaluating, so the jitted evaluation function sees O(log k_max) distinct
+shapes over a whole run instead of one shape per tick.  The pad lanes
+repeat the last real point and are masked off the returned block — never
+dropped, so remainder workunits cost a little redundant compute but no
+correctness.  Bucket shapes depend only on the block size (and the
+backend's shard count floor), NOT on the grid's host count.
+
+Two backends ship with the repo:
+
+  * ``InProcessEvalBackend`` — the default: one jitted ``f_batch`` call on
+    the local device (what ``BatchedVolunteerGrid`` inlined before the
+    seam existed);
+  * ``substrates/pod_mesh.py::PodMeshEvalBackend`` — ``shard_map``s each
+    bucket over the ``data`` axis of the production pod mesh.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import numpy as np
+
+
+def bucket_size(k: int, min_bucket: int = 8) -> int:
+    """Smallest power of two ≥ max(k, min_bucket).  ``min_bucket`` must be
+    a power of two (backends use their shard count, which is)."""
+    if min_bucket & (min_bucket - 1):
+        raise ValueError(f"min_bucket must be a power of two, got {min_bucket}")
+    return max(min_bucket, 1 << max(k - 1, 0).bit_length())
+
+
+class EvalBackend:
+    """Base class: pad-to-bucket framing around a subclass evaluation.
+
+    Subclasses implement ``_eval_bucket((kp, n) block) -> (kp,) fitness``
+    for ``kp`` already padded to a power-of-two multiple of the backend's
+    lane count; this class owns padding and remainder masking so every
+    backend frames blocks identically (a parity requirement: same engine
+    seed must mean the same committed iterates on any backend).
+    """
+
+    min_bucket: int = 8
+
+    def __call__(self, pts: np.ndarray) -> np.ndarray:
+        k = pts.shape[0]
+        kp = bucket_size(k, self.min_bucket)
+        if kp != k:
+            pts = np.concatenate([pts, np.repeat(pts[-1:], kp - k, axis=0)])
+        ys = np.asarray(self._eval_bucket(pts), np.float64)
+        return ys[:k]
+
+    def _eval_bucket(self, pts: np.ndarray) -> np.ndarray:
+        raise NotImplementedError
+
+
+class InProcessEvalBackend(EvalBackend):
+    """Default backend: one jitted ``f_batch`` call on the local device.
+
+    f_batch: (kp, n) -> (kp,) fitness, jit-friendly.
+    """
+
+    def __init__(self, f_batch: Callable, min_bucket: int = 8):
+        self.f_batch = f_batch
+        self.min_bucket = bucket_size(1, min_bucket)
+
+    def _eval_bucket(self, pts: np.ndarray) -> np.ndarray:
+        import jax.numpy as jnp
+        return self.f_batch(jnp.asarray(pts, jnp.float32))

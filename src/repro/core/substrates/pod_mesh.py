@@ -1,0 +1,85 @@
+"""Pod-mesh evaluation backend: shard_map workunit buckets over the pod.
+
+This is the ROADMAP's "wire the batched grid to the pod mesh" step: instead
+of evaluating each tick's workunit block with one local ``f_batch`` call,
+``PodMeshEvalBackend`` partitions the padded bucket over the ``data`` axis
+of the production mesh (``launch/mesh.py::make_production_mesh``, 16×16 =
+256 devices under dryrun's forced 512-device host platform) and lets every
+data shard evaluate its ``kp / n_shards`` rows in parallel.  The ``model``
+axis is left for the fitness function itself (a replicated closure today;
+a model-sharded likelihood slots in without touching the grid).
+
+Key properties (DESIGN.md §6):
+
+  * buckets are powers of two with a floor at the shard count, so every
+    shard gets the same whole number of rows and XLA still compiles
+    O(log k_max) shapes — shapes depend on the block size and shard count,
+    never on the grid's host count;
+  * remainder lanes (k < bucket) are padded with the last real point and
+    masked off the result by the shared ``EvalBackend`` framing — never
+    dropped;
+  * rows are evaluated by the SAME per-row computation as in-process
+    (``f_batch`` is row-independent), so a given engine seed commits
+    bit-identical iterates on either backend — pinned by
+    tests/test_substrates_pod_mesh.py and the shootout's parity gate.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import numpy as np
+
+from repro.core.substrates.eval_backend import EvalBackend, bucket_size
+
+
+def make_data_mesh():
+    """Best evaluation mesh for the visible devices: the production pod
+    when enough devices exist (e.g. under ``launch/dryrun``'s forced host
+    platform), else the largest power-of-two data-parallel mesh that fits
+    — down to a degenerate (1, 1) mesh on a single-device CPU, which keeps
+    the shard_map path importable and testable anywhere."""
+    import jax
+    from repro.launch.mesh import make_production_mesh
+    try:
+        return make_production_mesh()
+    except RuntimeError:
+        n = len(jax.devices())
+        d = 1 << (n.bit_length() - 1)
+        return jax.make_mesh((d, 1), ("data", "model"),
+                             devices=jax.devices()[:d])
+
+
+class PodMeshEvalBackend(EvalBackend):
+    """Evaluate buckets with ``shard_map`` over the mesh's ``data`` axis.
+
+    f_batch: (rows, n) -> (rows,) fitness, jit-friendly and row-independent
+    (each shard calls it on its local rows).  ``mesh`` defaults to
+    ``make_data_mesh()``.
+    """
+
+    def __init__(self, f_batch: Callable, mesh=None, data_axis: str = "data"):
+        import jax
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        self.mesh = make_data_mesh() if mesh is None else mesh
+        self.data_axis = data_axis
+        self.n_shards = int(self.mesh.shape[data_axis])
+        if self.n_shards & (self.n_shards - 1):
+            raise ValueError(
+                f"data axis must be a power of two to divide the "
+                f"power-of-two buckets, got {self.n_shards}")
+        # floor of 4 rows per shard: XLA CPU picks a different (last-ulp
+        # divergent) vectorization for 2-row sub-batches (observed on jax
+        # 0.4.37 — every other width is bitwise-stable), and bit-identical
+        # iterates vs the in-process backend are a hard contract of this
+        # seam.  The parity gates (tests + dryrun smoke + shootout) exist
+        # to catch any future regression of this property.
+        self.min_bucket = bucket_size(4 * self.n_shards)
+        self._eval = jax.jit(shard_map(
+            f_batch, mesh=self.mesh,
+            in_specs=P(data_axis, None), out_specs=P(data_axis)))
+
+    def _eval_bucket(self, pts: np.ndarray) -> np.ndarray:
+        import jax.numpy as jnp
+        return self._eval(jnp.asarray(pts, jnp.float32))

@@ -9,9 +9,16 @@ in/out shardings, ``.lower().compile()`` against the production mesh, and
 record memory_analysis / cost_analysis / per-kind collective bytes into
 artifacts/dryrun/<arch>__<shape>__<mesh>.json for the roofline report.
 
+``--substrate pod_mesh`` instead runs the batched-grid substrate smoke:
+the same ANM workload through the in-process backend and the shard_map
+pod-mesh backend on the forced 512-device host platform, requiring
+bit-identical committed iterates (DESIGN.md §6) — so the production
+partitioning is exercised on CPU before any TPU time is spent.
+
 Usage:
     python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k
     python -m repro.launch.dryrun --all [--mesh pod|multipod|both] [--skip-existing]
+    python -m repro.launch.dryrun --substrate pod_mesh
 """
 import argparse
 import functools
@@ -180,6 +187,75 @@ def run_cell(arch, shape_name, multi_pod, out_dir, skip_existing=False,
         return False
 
 
+def run_substrate_smoke(out_dir: str, m: int = 32, iterations: int = 2,
+                        n_stars: int = 500, n_hosts: int = 512) -> bool:
+    """Pod-mesh substrate smoke (the ``--substrate pod_mesh`` path).
+
+    Runs the SAME batched-grid workload twice — in-process backend, then
+    ``PodMeshEvalBackend`` shard_mapping every bucket over the production
+    (data=16, model=16) mesh of forced host devices — and requires
+    identical committed centers, fitness history and iteration counts.
+    Writes artifacts/dryrun/substrate_pod_mesh.json; returns pass/fail.
+    """
+    import numpy as np
+    from repro.core.anm import AnmConfig
+    from repro.core.engine import AnmEngine, identical_trajectories
+    from repro.core.grid import GridConfig
+    from repro.core.substrates.batched_grid import BatchedVolunteerGrid
+    from repro.core.substrates.pod_mesh import PodMeshEvalBackend
+    from repro.data import sdss
+
+    mesh = make_production_mesh()
+    stripe = sdss.make_stripe("podmesh_smoke", n_stars=n_stars, seed=17)
+    f_batch, _ = sdss.make_fitness(stripe)
+    rng = np.random.default_rng(3)
+    x0 = np.clip(stripe.truth + rng.normal(0, 0.2, 8).astype(np.float32),
+                 sdss.LO, sdss.HI)
+    anm_cfg = AnmConfig(m_regression=m, m_line_search=m,
+                        max_iterations=iterations)
+    grid_cfg = GridConfig(n_hosts=n_hosts, failure_prob=0.05,
+                          malicious_prob=0.01, seed=9)
+
+    def run_with(backend):
+        engine = AnmEngine(x0, sdss.LO, sdss.HI, sdss.DEFAULT_STEP,
+                           anm_cfg, seed=7)
+        t0 = time.time()
+        stats = BatchedVolunteerGrid(f_batch, grid_cfg,
+                                     backend=backend).run(engine)
+        return engine, stats, time.time() - t0
+
+    e_in, s_in, t_in = run_with(None)          # default in-process backend
+    pod = PodMeshEvalBackend(f_batch, mesh=mesh)
+    e_pod, s_pod, t_pod = run_with(pod)
+
+    centers_equal = (
+        len(e_in.history) == len(e_pod.history) and
+        all(np.array_equal(a.center, b.center)
+            for a, b in zip(e_in.history, e_pod.history)))
+    fitness_equal = [r.best_fitness for r in e_in.history] == \
+        [r.best_fitness for r in e_pod.history]
+    ok = identical_trajectories(e_in, e_pod)
+    report = {
+        "mesh": "16x16", "data_shards": pod.n_shards,
+        "min_bucket": pod.min_bucket, "n_hosts": n_hosts, "m": m,
+        "iterations": {"in_process": e_in.iteration, "pod_mesh": e_pod.iteration},
+        "final": {"in_process": e_in.best_fitness, "pod_mesh": e_pod.best_fitness},
+        "batch_calls": {"in_process": s_in.batch_calls, "pod_mesh": s_pod.batch_calls},
+        "wall_s": {"in_process": round(t_in, 3), "pod_mesh": round(t_pod, 3)},
+        "centers_equal": centers_equal, "fitness_equal": fitness_equal,
+        "parity_ok": ok,
+    }
+    path = os.path.join(out_dir, "substrate_pod_mesh.json")
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"[{'ok' if ok else 'FAIL'}] substrate pod_mesh: "
+          f"{pod.n_shards} data shards, iters "
+          f"{e_in.iteration}/{e_pod.iteration}, final "
+          f"{e_in.best_fitness:.6f}/{e_pod.best_fitness:.6f}, "
+          f"wall {t_in:.2f}s/{t_pod:.2f}s -> {path}")
+    return ok
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -205,11 +281,16 @@ def main():
     ap.add_argument("--quant-cache", action="store_true",
                     help="int8 KV/latent cache (perf variant)")
     ap.add_argument("--suffix", default="", help="artifact filename suffix")
+    ap.add_argument("--substrate", default=None, choices=["pod_mesh"],
+                    help="run the substrate smoke instead of model cells")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
     out_dir = args.out or os.path.abspath(ARTIFACTS)
     os.makedirs(out_dir, exist_ok=True)
+
+    if args.substrate == "pod_mesh":
+        raise SystemExit(0 if run_substrate_smoke(out_dir) else 1)
     meshes = {"pod": [False], "multipod": [True], "both": [False, True]}[args.mesh]
 
     archs = ARCH_NAMES if (args.all or args.arch is None) else [args.arch]

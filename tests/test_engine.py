@@ -15,7 +15,7 @@ from repro.core import regression as reg
 from repro.core.anm import AnmConfig, anm_minimize
 from repro.core.engine import AnmEngine, EvalResult
 from repro.core.fgdo import FgdoAnmServer
-from repro.core.grid import GridConfig, VolunteerGrid
+from repro.core.grid import GridConfig, VolunteerGrid, malicious_lie
 from repro.core.substrates.batched_grid import BatchedVolunteerGrid
 
 
@@ -38,6 +38,21 @@ def _quad_problem(n=4, seed=0):
 
 def _assimilate_all(engine, reqs, f):
     return engine.assimilate([EvalResult(r, f(r.point)) for r in reqs])
+
+
+def _bootstrap(engine, f):
+    """Complete the engine's phase-0 f(x0) evaluation, including its
+    quorum round (every run starts with it since the first-commit guard
+    moved into the engine; the probe is validated like any result the
+    engine uses)."""
+    assert engine.phase == "bootstrap"
+    _assimilate_all(engine, engine.generate(), f)   # the probe
+    while engine.validating:
+        reqs = engine.generate()
+        if not reqs:
+            break
+        _assimilate_all(engine, reqs, f)            # quorum replicas
+    assert engine.phase == "regression"
 
 
 # -- sync/async parity ------------------------------------------------------
@@ -97,6 +112,7 @@ def test_stale_phase_results_are_discarded():
     cfg = AnmConfig(m_regression=40, m_line_search=40, max_iterations=4)
     engine = AnmEngine(np.ones(n), -10 * np.ones(n), 10 * np.ones(n),
                        0.5 * np.ones(n), cfg, seed=0)
+    _bootstrap(engine, f)
     reqs = engine.generate(41)               # one more than the phase needs
     straggler = reqs[-1]
     _assimilate_all(engine, reqs[:40], f)    # phase advances at m=40
@@ -116,6 +132,7 @@ def test_failed_validation_rejects_candidate_and_promotes_next():
     cfg = AnmConfig(m_regression=40, m_line_search=40, max_iterations=1)
     engine = AnmEngine(np.ones(n), -10 * np.ones(n), 10 * np.ones(n),
                        0.5 * np.ones(n), cfg, seed=0, validation_quorum=2)
+    _bootstrap(engine, f)
     _assimilate_all(engine, engine.generate(), f)          # regression phase
     assert engine.phase == "linesearch"
     reqs = engine.generate()
@@ -141,6 +158,7 @@ def test_lost_validation_replicas_can_be_reissued():
     cfg = AnmConfig(m_regression=30, m_line_search=30, max_iterations=1)
     engine = AnmEngine(np.ones(n), -10 * np.ones(n), 10 * np.ones(n),
                        0.5 * np.ones(n), cfg, seed=0, validation_quorum=2)
+    _bootstrap(engine, f)
     _assimilate_all(engine, engine.generate(), f)
     _assimilate_all(engine, engine.generate(), f)
     if engine.done:                                        # committed already
@@ -155,11 +173,191 @@ def test_lost_validation_replicas_can_be_reissued():
     assert engine.done and engine.iteration == 1
 
 
+# -- bootstrap guard: first commit can never accept a worse point ------------
+
+def test_first_candidate_worse_than_start_is_not_committed():
+    """With x0 AT the optimum, every candidate is worse than the start.
+    Before the engine-side bootstrap, async substrates compared the first
+    commit against inf and moved the center to a strictly worse point; now
+    f(x0) is evaluated as a phase-0 request on every substrate, so the
+    center must never move and best_fitness must equal f(x0)."""
+    f, f_batch, x_opt, n = _quad_problem(seed=21)
+    f0 = f(x_opt)
+    lo, hi, step = -10 * np.ones(n), 10 * np.ones(n), 0.5 * np.ones(n)
+    cfg = AnmConfig(m_regression=40, m_line_search=40, max_iterations=3)
+
+    # synchronous driver
+    state = anm_minimize(f_batch, x_opt.copy(), lo, hi, step, cfg,
+                         key=jax.random.key(1))
+    assert state.best_fitness <= f0 + 1e-12
+    np.testing.assert_allclose(np.asarray(state.center), x_opt, atol=1e-12)
+
+    # FGDO adapter on the per-event grid (could NOT seed f(x0) before)
+    server = FgdoAnmServer(x_opt.copy(), lo, hi, step, cfg, seed=1)
+    VolunteerGrid(f, GridConfig(n_hosts=16, failure_prob=0.0,
+                                malicious_prob=0.0, seed=2)).run(server)
+    assert server.best_fitness <= f0 + 1e-12
+    np.testing.assert_array_equal(server.center, x_opt)
+    assert all(r.best_fitness <= f0 + 1e-12 for r in server.history)
+
+    # batched grid (could NOT seed f(x0) before either)
+    engine = AnmEngine(x_opt.copy(), lo, hi, step, cfg, seed=1)
+    BatchedVolunteerGrid(lambda xs: f_batch(xs),
+                         GridConfig(n_hosts=64, failure_prob=0.05,
+                                    malicious_prob=0.0, seed=3)).run(engine)
+    assert engine.best_fitness <= f0 + 1e-12
+    np.testing.assert_array_equal(engine.center, x_opt)
+
+
+def test_malicious_bootstrap_probe_cannot_poison_threshold():
+    """The f(x0) claim gates every commit, so it is quorum-validated like
+    any other result the engine uses: a lying probe must be rejected (and
+    the bootstrap re-run) instead of freezing the run with a fabricated
+    improvement threshold below the global optimum."""
+    f, _, _, n = _quad_problem(seed=9)
+    cfg = AnmConfig(m_regression=30, m_line_search=30, max_iterations=2)
+    engine = AnmEngine(np.ones(n), -10 * np.ones(n), 10 * np.ones(n),
+                       0.5 * np.ones(n), cfg, seed=0, validation_quorum=2)
+    probe = engine.generate()[0]
+    truth = f(probe.point)
+    lie = float(malicious_lie(truth, 0.8)) - 100.0   # below the optimum
+    engine.assimilate([EvalResult(probe, lie)])
+    assert engine.validating and engine.bootstrapping
+    _assimilate_all(engine, engine.generate(), f)    # honest replicas
+    assert engine.phase == "bootstrap"               # lie rejected, retry
+    assert engine.stats.validations_failed >= 1
+    assert engine.best_fitness == float("inf")
+    _bootstrap(engine, f)                            # honest second round
+    assert engine.best_fitness == truth
+
+
+# -- staleness counters: phase-stale vs validation-stale ---------------------
+
+def test_validation_stale_counted_separately_from_phase_stale():
+    """A quorum replica landing after its candidate was decided is NOT a
+    phase-stale result: it must bump validations_stale, not stale."""
+    f, _, _, n = _quad_problem(seed=2)
+    cfg = AnmConfig(m_regression=40, m_line_search=40, max_iterations=1)
+    engine = AnmEngine(np.ones(n), -10 * np.ones(n), 10 * np.ones(n),
+                       0.5 * np.ones(n), cfg, seed=0, validation_quorum=2)
+    _bootstrap(engine, f)
+    _assimilate_all(engine, engine.generate(), f)          # regression
+    reqs = engine.generate()                               # line search
+    honest = [EvalResult(r, f(r.point)) for r in reqs[:-1]]
+    lie = EvalResult(reqs[-1], -1e6)                       # fake winner
+    engine.assimilate(honest + [lie])
+    assert engine.validating
+    replicas = engine.generate()                           # quorum for the lie
+    extra = engine.reissue_validation()                    # a third, late copy
+    stale_before = engine.stats.stale
+    # honest replicas reject the lie and promote the next candidate
+    _assimilate_all(engine, replicas, f)
+    assert engine.stats.candidates_rejected >= 1
+    vstale_before = engine.stats.validations_stale
+    _assimilate_all(engine, [extra], f)    # replica for the DECIDED candidate
+    assert engine.stats.validations_stale == vstale_before + 1
+    assert engine.stats.stale == stale_before              # not conflated
+
+
+# -- sign-safe malicious lie ---------------------------------------------------
+
+def test_malicious_lie_fakes_improvement_for_any_sign():
+    """The corruption model must under-report fitness for positive,
+    negative and zero truths — the old multiplicative lie y*u was harmless
+    for y <= 0, so fault-tolerance tests near an optimum tested nothing."""
+    for y in (-25.0, -1e-9, 0.0, 3.0):
+        for u in (0.2, 0.5, 0.8):
+            lie = float(malicious_lie(y, u))
+            assert lie < y - 0.19 * (abs(y) + 1.0)
+    arr = malicious_lie(np.array([-2.0, 0.0, 2.0]), np.array([0.5, 0.5, 0.5]))
+    assert (arr < np.array([-2.0, 0.0, 2.0])).all()
+
+
+def test_corrupted_result_rejected_when_true_fitness_nonpositive():
+    """Quorum validation must reject a lie even when the TRUE fitness at
+    the lying point is <= 0 (the regime the old lie could not attack)."""
+    _, _, x_opt, n = _quad_problem(seed=4)
+
+    def f(x):                                   # shifted: optimum region < 0
+        d = np.asarray(x, np.float64) - x_opt
+        return float(d @ d) - 5.0
+
+    cfg = AnmConfig(m_regression=40, m_line_search=40, max_iterations=1)
+    engine = AnmEngine(x_opt + 0.05, -10 * np.ones(n), 10 * np.ones(n),
+                       0.1 * np.ones(n), cfg, seed=0, validation_quorum=2)
+    _bootstrap(engine, f)
+    assert engine.best_fitness < 0            # the regime under test
+    _assimilate_all(engine, engine.generate(), f)
+    reqs = engine.generate()
+    honest = [EvalResult(r, f(r.point)) for r in reqs[:-1]]
+    truth = f(reqs[-1].point)
+    assert truth <= 0
+    corrupted = EvalResult(reqs[-1], float(malicious_lie(truth, 0.5)))
+    assert corrupted.y < truth                # the lie still ranks first
+    engine.assimilate(honest + [corrupted])
+    assert engine.validating
+    assert engine._candidate[0] == corrupted.y
+    while engine.validating and not engine.done:
+        replicas = engine.generate()
+        if not replicas:
+            break
+        _assimilate_all(engine, replicas, f)  # replicas return the truth
+    assert engine.stats.validations_failed >= 1
+    assert engine.stats.candidates_rejected >= 1
+    assert engine.best_fitness > corrupted.y  # the lie never committed
+    # whatever committed is a REAL fitness of the committed center
+    assert abs(engine.best_fitness - f(engine.center)) <= \
+        1e-6 * max(1.0, abs(engine.best_fitness))
+
+
+# -- array fast path == object path -------------------------------------------
+
+def test_assimilate_arrays_matches_object_path():
+    """The block fast path must drive the engine through the identical
+    state trajectory as element-wise EvalResults — including mid-block
+    phase flips and stale tails."""
+    f, _, _, n = _quad_problem(seed=6)
+    cfg = AnmConfig(m_regression=30, m_line_search=30, max_iterations=2)
+
+    def drive(use_arrays):
+        engine = AnmEngine(np.ones(n), -10 * np.ones(n), 10 * np.ones(n),
+                           0.5 * np.ones(n), cfg, seed=0)
+        while not engine.done:
+            reqs = engine.generate()
+            if not reqs:
+                break
+            # deliver 7 extra stale-to-be results after the flip
+            extra = engine.generate(7) if engine.phase in (
+                "regression", "linesearch") else []
+            batch = reqs + extra
+            if use_arrays:
+                engine.assimilate_arrays(
+                    np.array([r.phase_id for r in batch]),
+                    np.array([r.ticket for r in batch]),
+                    np.stack([r.point for r in batch]),
+                    np.array([r.alpha for r in batch]),
+                    np.array([-1 if r.validates is None else r.validates
+                              for r in batch]),
+                    np.array([f(r.point) for r in batch]))
+            else:
+                _assimilate_all(engine, batch, f)
+        return engine
+
+    a, b = drive(True), drive(False)
+    assert a.iteration == b.iteration
+    np.testing.assert_array_equal(a.center, b.center)
+    assert a.best_fitness == b.best_fitness
+    assert a.stats == b.stats
+    assert [r.best_fitness for r in a.history] == \
+        [r.best_fitness for r in b.history]
+
+
 # -- batched grid substrate --------------------------------------------------
 
-def _run_batched(n_hosts=512, seed=7, **grid_kw):
+def _run_batched(n_hosts=512, seed=7, max_iterations=6, **grid_kw):
     f, f_batch, x_opt, n = _quad_problem(seed=11)
-    cfg = AnmConfig(m_regression=60, m_line_search=60, max_iterations=6)
+    cfg = AnmConfig(m_regression=60, m_line_search=60,
+                    max_iterations=max_iterations)
     engine = AnmEngine(np.ones(n), -10 * np.ones(n), 10 * np.ones(n),
                        0.5 * np.ones(n), cfg, seed=seed)
     calls = {"n": 0, "pts": 0}
@@ -198,8 +396,11 @@ def test_batched_grid_deterministic():
 
 
 def test_batched_grid_survives_malice():
+    # 10% malicious + 20% loss: heavier faults cost iterations (rejected
+    # candidates, shrink recoveries), so give the run more room than the
+    # faultless cases — the claim is convergence DESPITE corruption
     engine, stats, _, f, _, n = _run_batched(
-        n_hosts=256, failure_prob=0.2, malicious_prob=0.1)
+        n_hosts=256, failure_prob=0.2, malicious_prob=0.1, max_iterations=10)
     assert stats.corrupted > 0
     assert engine.best_fitness < 5e-2 * f(np.ones(n))
 

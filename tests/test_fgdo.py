@@ -93,9 +93,9 @@ def test_malicious_best_rejected():
                            cfg=AnmConfig(m_regression=30, m_line_search=30,
                                          max_iterations=1),
                            seed=1, validation_quorum=2)
-    # drive manually: regression phase with honest results
+    # drive manually: bootstrap f(x0), then regression with honest results
     now = 0.0
-    while server.phase == "regression":
+    while server.phase in ("bootstrap", "regression"):
         wu = server.generate_work(0, now)
         server.assimilate(wu, f(wu.point), 0, now)
         now += 1
@@ -116,3 +116,44 @@ def test_malicious_best_rejected():
     assert server.stats.validations_failed >= 1
     # committed fitness must be a real value, not the lie
     assert server.history[-1].best_fitness > -100.0
+
+
+def test_vanishing_fast_host_loses_reliable_status():
+    """A host that takes work and never returns must stop receiving
+    latency-critical validation replicas.  Turnaround tracking alone is
+    failure-blind: a vanishing host records NO turnaround, so it stayed
+    'reliable' forever before the return-rate guard."""
+    def f(x):
+        return float(np.sum(np.asarray(x) ** 2))
+
+    server = FgdoAnmServer(x0=np.ones(2), lo=-5 * np.ones(2),
+                           hi=5 * np.ones(2), step=0.3 * np.ones(2),
+                           cfg=AnmConfig(m_regression=30, m_line_search=30,
+                                         max_iterations=1),
+                           seed=1, validation_quorum=2)
+    now = 0.0
+    black_hole = 0                 # the fast host that drops everything
+    workers = [1, 2, 3, 4]
+    # interleave: the black hole grabs work instantly and never returns it;
+    # honest workers complete the phases
+    while server.phase in ("bootstrap", "regression"):
+        server.generate_work(black_hole, now)              # vanishes
+        h = workers[int(now) % len(workers)]
+        wu = server.generate_work(h, now)
+        if wu is not None:
+            server.assimilate(wu, f(wu.point), h, now + 1.0)
+        now += 1
+    while server.phase == "linesearch" and not server.validating:
+        server.generate_work(black_hole, now)              # vanishes
+        h = workers[int(now) % len(workers)]
+        wu = server.generate_work(h, now)
+        if wu is not None:
+            server.assimilate(wu, f(wu.point), h, now + 1.0)
+        now += 1
+    assert server.validating
+    assert server._host_issued[black_hole] >= 4
+    assert server._host_returned.get(black_hole, 0) == 0
+    # the black hole is refused validation work; a returning host is not
+    assert not server._host_reliable(black_hole)
+    assert server.generate_work(black_hole, now) is None
+    assert server.generate_work(workers[0], now) is not None

@@ -1,0 +1,141 @@
+"""Pod-mesh evaluation backend: bucket framing, shard_map parity, and the
+dryrun forced-host-device smoke (DESIGN.md §6).
+
+The contract under test: WHERE a workunit block is evaluated is invisible
+to the engine — the pod-mesh backend must commit bit-identical iterates to
+the in-process backend at the same engine seed and grid config.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.anm import AnmConfig
+from repro.core.engine import AnmEngine
+from repro.core.grid import GridConfig
+from repro.core.substrates.batched_grid import BatchedVolunteerGrid
+from repro.core.substrates.eval_backend import (InProcessEvalBackend,
+                                                bucket_size)
+from repro.core.substrates.pod_mesh import PodMeshEvalBackend, make_data_mesh
+
+
+def _quad_fitness(n=8, seed=3):
+    rng = np.random.default_rng(seed)
+    A = rng.normal(size=(n, n)).astype(np.float32)
+    H = jnp.asarray(A @ A.T + n * np.eye(n, dtype=np.float32))
+    x_opt = jnp.asarray(rng.uniform(-0.5, 0.5, n).astype(np.float32))
+
+    @jax.jit
+    def f_batch(xs):
+        d = xs - x_opt[None, :]
+        return 0.5 * jnp.einsum("mi,ij,mj->m", d, H, d)
+
+    return f_batch, n
+
+
+# -- bucket framing -----------------------------------------------------------
+
+def test_bucket_size_power_of_two_with_floor():
+    assert bucket_size(1) == 8
+    assert bucket_size(8) == 8
+    assert bucket_size(9) == 16
+    assert bucket_size(500) == 512
+    assert bucket_size(3, min_bucket=16) == 16
+    with pytest.raises(ValueError):
+        bucket_size(4, min_bucket=12)        # not a power of two
+
+
+def test_backend_pads_to_buckets_and_masks_remainder():
+    f_batch, n = _quad_fitness()
+    seen = []
+
+    def recording(xs):
+        seen.append(xs.shape[0])
+        return f_batch(xs)
+
+    be = InProcessEvalBackend(recording)
+    for k in (1, 5, 8, 13, 64, 100):
+        pts = np.random.default_rng(k).uniform(-1, 1, (k, n))
+        ys = be(pts)
+        assert ys.shape == (k,)              # remainder masked, not dropped
+        ref = np.asarray(f_batch(jnp.asarray(pts, jnp.float32)), np.float64)
+        np.testing.assert_array_equal(ys, ref)
+    assert seen == [bucket_size(k) for k in (1, 5, 8, 13, 64, 100)]
+
+
+def test_pod_backend_bucket_floor_is_shard_count():
+    f_batch, _ = _quad_fitness()
+    pod = PodMeshEvalBackend(f_batch)
+    assert pod.min_bucket >= pod.n_shards
+    assert pod.min_bucket & (pod.min_bucket - 1) == 0
+
+
+# -- backend value parity ------------------------------------------------------
+
+def test_pod_backend_values_match_in_process_exactly():
+    f_batch, n = _quad_fitness()
+    inp = InProcessEvalBackend(f_batch)
+    pod = PodMeshEvalBackend(f_batch, mesh=make_data_mesh())
+    for k in (1, 7, 32, 200):
+        pts = np.random.default_rng(k).uniform(-2, 2, (k, n))
+        np.testing.assert_array_equal(inp(pts), pod(pts))
+
+
+# -- end-to-end committed-iterate parity ---------------------------------------
+
+def test_pod_and_in_process_backends_commit_identical_iterates():
+    """Same engine seed + same grid config => bit-identical committed
+    centers, fitness history, iteration counts and sim time, whichever
+    backend evaluates the buckets."""
+    f_batch, n = _quad_fitness()
+    cfg = AnmConfig(m_regression=48, m_line_search=48, max_iterations=4)
+    grid_cfg = GridConfig(n_hosts=256, failure_prob=0.1,
+                          malicious_prob=0.02, seed=3)
+
+    def run(backend):
+        engine = AnmEngine(np.ones(n), -10 * np.ones(n), 10 * np.ones(n),
+                           0.5 * np.ones(n), cfg, seed=7)
+        stats = BatchedVolunteerGrid(f_batch, grid_cfg,
+                                     backend=backend).run(engine)
+        return engine, stats
+
+    e_in, s_in = run(None)                    # default in-process
+    e_pod, s_pod = run(PodMeshEvalBackend(f_batch))
+    assert e_in.iteration == e_pod.iteration
+    assert len(e_in.history) == len(e_pod.history)
+    for a, b in zip(e_in.history, e_pod.history):
+        np.testing.assert_array_equal(a.center, b.center)
+        assert a.best_fitness == b.best_fitness
+    assert s_in.sim_time == s_pod.sim_time
+    assert s_in.completed == s_pod.completed
+
+
+# -- the real partitioning, under dryrun's forced 512-device mesh --------------
+
+@pytest.mark.slow
+def test_dryrun_pod_mesh_smoke_parity(tmp_path):
+    """Run the `--substrate pod_mesh` dryrun in a subprocess (it forces
+    XLA_FLAGS=--xla_force_host_platform_device_count=512 before importing
+    jax) and require the bit-identical parity report on the production
+    16x16 mesh."""
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(repo, "src"),
+               JAX_PLATFORMS="cpu")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--substrate", "pod_mesh", "--out", str(tmp_path)],
+        capture_output=True, text=True, timeout=900, env=env, cwd=repo)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    report = json.loads((tmp_path / "substrate_pod_mesh.json").read_text())
+    assert report["parity_ok"] is True
+    assert report["centers_equal"] is True
+    assert report["fitness_equal"] is True
+    assert report["data_shards"] == 16
+    assert report["iterations"]["in_process"] == \
+        report["iterations"]["pod_mesh"]
