@@ -3,9 +3,12 @@
 Prints ``name,us_per_call,derived`` CSV.  ``python -m benchmarks.run``.
 
 ``--smoke`` runs a CI-sized subset (currently the scalability module's
-substrate shootout, including the pod-mesh parity and sharding-overhead
-gates) so regressions in the batched grid substrate and its evaluation
-backends are caught on every push without paying for the full sweeps.
+substrate + pipelined shootouts, including the pod-mesh parity,
+sharding-overhead and pipelined-vs-sync parity/speedup gates) so
+regressions in the batched grid substrate, its evaluation backends and
+the pipelined tick loop are caught on every push without paying for the
+full sweeps.  Both shootouts also refresh the repo-root
+``BENCH_scalability.json`` perf ledger.
 """
 from __future__ import annotations
 

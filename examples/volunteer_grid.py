@@ -74,6 +74,11 @@ def main():
           f"simulated hours — {bstats.batch_calls} fitness batches "
           f"(mean {bstats.batched_evals / max(bstats.batch_calls, 1):.0f} "
           f"points each), {wall:.1f}s wall")
+    print(f"  pipelined ticks (DESIGN.md §7): device-blocked "
+          f"{bstats.device_blocked_s:.2f}s vs host {bstats.host_s:.2f}s, "
+          f"pipeline depth {bstats.max_in_flight}, "
+          f"{bstats.spec_blocks} speculative blocks "
+          f"({bstats.spec_discarded} discarded)")
 
     # -- act 3: the same grid, buckets shard_mapped over the pod mesh --------
     # (DESIGN.md §6 — on this CPU the mesh degenerates to the available

@@ -190,6 +190,10 @@ class AnmEngine:
         self._pending_validation = 0
         self._bootstrapping = False   # validating the f(x0) probe itself
         self._line_avg = float("nan")
+        # block-speculation snapshot (peek_block/cancel_block): rng state +
+        # ticket counter + issuance stat, enough to make a speculatively
+        # generated block fully revertible
+        self._spec_snapshot: Optional[Tuple] = None
 
     # -- introspection ------------------------------------------------------
 
@@ -315,6 +319,40 @@ class AnmEngine:
         tickets = np.arange(self._next_ticket, self._next_ticket + k)
         self._next_ticket += k
         return tickets, self.phase_id, pts, alphas
+
+    # -- block speculation (pipelined substrates, DESIGN.md §7) -------------
+
+    def peek_block(self, k: Optional[int] = None):
+        """Speculatively generate a block for the CURRENT phase: exactly the
+        draws ``generate_block(k)`` would make, but revertible.  A pipelined
+        substrate calls this while earlier results are still in flight on
+        the device, betting that assimilating them will not flip the phase
+        (within a phase, generated points depend only on phase state and the
+        engine rng — never on pending ``ys``).  If the bet loses, the block
+        is stale under the new phase_id: ``cancel_block()`` rewinds the rng
+        stream, ticket counter and issuance stat as if the peek never
+        happened, so a discarded speculation is invisible to the committed
+        trajectory.  ``accept_block()`` (or the next peek) drops the
+        snapshot once the block has really been handed out."""
+        self._spec_snapshot = (self.rng.bit_generator.state,
+                               self._next_ticket, self.stats.issued)
+        return self.generate_block(k)
+
+    def accept_block(self) -> None:
+        """Commit the last peeked block: the snapshot is dropped, making
+        the speculation indistinguishable from a plain ``generate_block``."""
+        self._spec_snapshot = None
+
+    def cancel_block(self) -> None:
+        """Discard the last peeked block, rewinding every side effect of
+        the peek (rng stream, tickets, ``stats.issued``)."""
+        if self._spec_snapshot is None:
+            return
+        state, ticket, issued = self._spec_snapshot
+        self.rng.bit_generator.state = state
+        self._next_ticket = ticket
+        self.stats.issued = issued
+        self._spec_snapshot = None
 
     def reissue_validation(self) -> Optional[EvalRequest]:
         """Extra quorum replica beyond the pending budget — for substrates

@@ -54,7 +54,8 @@ def sample_hosts(cfg: GridConfig) -> Tuple[np.ndarray, np.ndarray,
 
 
 def malicious_lie(y, u):
-    """Sign-safe corrupted fitness shared by both grid simulators.
+    """Sign-safe corrupted fitness shared by both grid simulators AND the
+    evaluation backends' on-device corruption lanes.
 
     Fitness is minimized, so a malicious host "wins" by under-reporting.
     The additive margin is scaled to ``|y| + 1`` so the lie beats the truth
@@ -62,9 +63,14 @@ def malicious_lie(y, u):
     multiplicative ``y * u``, which only fakes an improvement when ``y > 0``
     and silently becomes harmless (or self-defeating) for the negative or
     near-zero fitness values that dominate close to an optimum.
+
+    Array-module agnostic on purpose: the dtype follows the inputs, and
+    ``np.abs`` dispatches through ``__array_ufunc__``, so the SAME helper
+    runs eagerly on host float64 (the per-event simulator) and traced
+    inside the backends' jitted bucket finalization (DESIGN.md §7), where
+    corruption is applied on-device as mask lanes shipped with the bucket.
     """
-    y = np.asarray(y, np.float64)
-    return y - (np.abs(y) + 1.0) * u
+    return y - (abs(y) + 1.0) * u
 
 
 class VolunteerGrid:

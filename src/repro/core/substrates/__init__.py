@@ -6,11 +6,11 @@ BOINC-style asynchronous server in core/fgdo.py for historical import
 stability; new substrates live here.
 
 WHERE a substrate evaluates its workunit blocks is a second, orthogonal
-seam — ``EvalBackend`` (DESIGN.md §6): in-process on the local device by
-default, or shard_mapped over the production pod mesh
-(``pod_mesh.PodMeshEvalBackend``).
+seam — ``EvalBackend`` (DESIGN.md §6–§7): an asynchronous submit/collect
+protocol, in-process on the local device by default, or shard_mapped over
+the production pod mesh (``pod_mesh.PodMeshEvalBackend``).
 """
 from repro.core.substrates.batched_grid import BatchedVolunteerGrid  # noqa: F401
 from repro.core.substrates.eval_backend import (  # noqa: F401
-    EvalBackend, InProcessEvalBackend)
+    EvalBackend, EvalHandle, InProcessEvalBackend)
 from repro.core.substrates.pod_mesh import PodMeshEvalBackend  # noqa: F401

@@ -1,4 +1,4 @@
-"""Vectorized volunteer-grid substrate: one batched fitness call per tick.
+"""Vectorized volunteer-grid substrate: pipelined, device-resident ticks.
 
 The per-event simulator (core/grid.py) calls ``f(point)`` once per Python
 event, so simulating the paper's m=1000-per-phase workloads at thousands of
@@ -6,8 +6,21 @@ hosts is Python/dispatch-bound.  This substrate keeps the same physics —
 lognormal host speeds, result loss, malicious corruption, identical host
 population per seed via ``grid.sample_hosts`` — but advances the whole
 fleet with numpy array ops and evaluates ALL workunits completing in a tick
-with a single jitted ``f_batch`` call (padded to power-of-two buckets so
-XLA compiles O(log n_hosts) shapes, not one per tick).
+with a single backend bucket (padded to power-of-two shapes so XLA compiles
+O(log n_hosts) shapes, not one per tick).
+
+Since the pipelined refactor (DESIGN.md §7) the hot loop never waits for
+the device inside a phase: a tick's bucket is ``submit``ted (JAX async
+dispatch) and the host immediately advances fleet physics and issues the
+next block SPECULATIVELY (``engine.peek_block``) instead of blocking on
+``collect``.  That is safe because, within a phase, generated points
+depend only on phase state and the engine rng — never on the pending
+``ys`` — and assimilating a partial phase cannot change any of that.  The
+grid predicts phase flips exactly (a phase flips iff the queued live
+results reach the phase's remaining ``wanted()``), drains the pipeline
+with ``collect`` only when assimilation must decide a transition, and the
+committed iterates are bit-identical to the non-pipelined path at the same
+seed — the hard parity contract, gated in tests, dryrun and the shootout.
 
 It drives the ``AnmEngine`` event API directly: requests out, results in,
 in completion-time order, so stale filtering and quorum validation behave
@@ -15,14 +28,18 @@ exactly as on the per-event grid (DESIGN.md §3).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Callable, Optional
+import time
+from typing import Callable, Dict, NamedTuple, Optional
 
 import numpy as np
 
-from repro.core.engine import AnmEngine
-from repro.core.grid import GridConfig, GridStats, malicious_lie, sample_hosts
-from repro.core.substrates.eval_backend import EvalBackend, InProcessEvalBackend
+from repro.core.engine import LINESEARCH, REGRESSION, AnmEngine
+from repro.core.grid import GridConfig, GridStats, sample_hosts
+from repro.core.substrates.eval_backend import (STAGING_RING, EvalBackend,
+                                                EvalHandle,
+                                                InProcessEvalBackend)
 
 
 @dataclasses.dataclass
@@ -30,20 +47,46 @@ class BatchedGridStats(GridStats):
     ticks: int = 0
     batch_calls: int = 0
     batched_evals: int = 0            # delivered results summed over ticks
+    device_blocked_s: float = 0.0     # wall seconds blocked in collect()
+    host_s: float = 0.0               # wall seconds of host-side simulation
+    spec_blocks: int = 0              # blocks issued speculatively (peek)
+    spec_discarded: int = 0           # speculative blocks rolled back
+    max_in_flight: int = 0            # deepest device pipeline reached
+    bucket_hist: Dict[int, int] = dataclasses.field(default_factory=dict)
+
+
+class _PendingTick(NamedTuple):
+    """One tick whose bucket is in flight on the device: the submitted
+    handle plus the delivered-result arrays assimilation will need."""
+    handle: Optional[EvalHandle]
+    d_phase: np.ndarray
+    d_ticket: np.ndarray
+    d_point: np.ndarray
+    d_alpha: np.ndarray
+    d_validates: np.ndarray
+    live_mask: np.ndarray
+    live_n: int
 
 
 class BatchedVolunteerGrid:
     """Tick-synchronous simulator over thousands of hosts.
 
-    f_batch: (k, n) -> (k,) fitness, jit-friendly.  ``tick_batch`` is how
-    many completions are drained per tick (default: n_hosts/16, ≥ 1) — the
-    per-event simulator corresponds to tick_batch=1.
+    f_batch: (k, n) -> (k,) fitness, jit-friendly (it is traced inside the
+    backend's bucket finalization).  ``tick_batch`` is how many completions
+    are drained per tick (default: n_hosts/16, ≥ 1) — the per-event
+    simulator corresponds to tick_batch=1.
 
     WHERE a tick's block is evaluated is a pluggable ``EvalBackend``
     (DESIGN.md §6): the default wraps ``f_batch`` in-process; pass
     ``backend=PodMeshEvalBackend(f_batch)`` to shard_map each bucket over
     the pod mesh instead — the committed iterates are bit-identical either
     way at a given engine seed.
+
+    ``pipelined=True`` (the default) overlaps host simulation with device
+    evaluation: up to ``pipeline_depth`` tick buckets ride the device
+    queue while the host runs ahead issuing speculative in-phase blocks;
+    ``pipelined=False`` collects every bucket synchronously (the PR-2
+    behavior).  Both modes commit bit-identical iterates at a given seed.
 
     Unlike the per-event simulator, which hands work to every requesting
     host, this substrate throttles issuance to ``engine.wanted() ×
@@ -54,7 +97,8 @@ class BatchedVolunteerGrid:
 
     def __init__(self, f_batch: Optional[Callable], cfg: GridConfig,
                  tick_batch: Optional[int] = None, overcommit: float = 2.0,
-                 backend: Optional[EvalBackend] = None):
+                 backend: Optional[EvalBackend] = None,
+                 pipelined: bool = True, pipeline_depth: int = 4):
         if backend is None:
             if f_batch is None:
                 raise ValueError("need f_batch or an explicit backend")
@@ -64,20 +108,38 @@ class BatchedVolunteerGrid:
         self.speeds, self.malicious, self.rng = sample_hosts(cfg)
         self.tick_batch = tick_batch or max(1, cfg.n_hosts // 16)
         self.overcommit = overcommit
+        self.pipelined = pipelined
+        # the backend's staging rings bound how many same-shape buckets may
+        # be in flight at once (zero-copy aliasing on CPU) — clamp the
+        # pipeline under that with one slot of submit-before-flush slack
+        self.pipeline_depth = max(1, min(pipeline_depth, STAGING_RING - 2))
         self.stats = BatchedGridStats()
 
-    def _eval_padded(self, pts: np.ndarray) -> np.ndarray:
-        """Evaluate a (k, n) block through the backend (which pads k to its
-        bucket shape, so the jitted path sees few distinct shapes)."""
-        ys = self.backend(pts)
-        self.stats.batch_calls += 1
-        return ys
+    @staticmethod
+    def warm_max_bucket(m: int, overcommit: float = 2.0) -> int:
+        """Largest live block a run at phase size ``m`` can deliver in one
+        tick (the issuance cap plus object-path slack) — THE formula for
+        pre-warming a backend's bucket ladder.  ``run()`` warms with this
+        internally; external callers that construct warmed backends
+        (benchmarks, dryrun) must use it too, or a changed ``overcommit``
+        would silently re-introduce mid-run compiles inside their timed
+        windows."""
+        return int(np.ceil(m * overcommit)) + 8
 
     def run(self, engine: AnmEngine, max_ticks: int = 1_000_000,
             max_sim_time: float = float("inf")) -> BatchedGridStats:
         cfg = self.cfg
         rng = self.rng
         n = cfg.n_hosts
+        # warm the backend's bucket ladder before the loop: live rows per
+        # tick are bounded by the issuance cap, so after this no bucket
+        # shape can compile mid-run (idempotent when already warmed)
+        max_live = min(n, self.warm_max_bucket(
+            max(engine.cfg.m_regression, engine.cfg.m_line_search),
+            self.overcommit))
+        self.backend.warm(engine.n, max_live)
+        t_run0 = time.perf_counter()
+        blocked0 = self.stats.device_blocked_s   # host_s must be per-run-sane
         busy = np.zeros(n, bool)
         lost = np.zeros(n, bool)      # host took work but will drop the result
         t_done = np.full(n, np.inf)
@@ -92,6 +154,14 @@ class BatchedVolunteerGrid:
         now = 0.0
         # hosts come online staggered, like the per-event simulator
         online = rng.uniform(0, cfg.base_eval_time / 10, n)
+
+        # in-flight tick buckets, oldest first, and the predicted value of
+        # engine.wanted() once they all assimilate (valid iff pending is
+        # nonempty; > 0 by construction — a queued tick that would reach
+        # the phase's m is flushed immediately, because only then can
+        # assimilation flip the phase)
+        pending: collections.deque = collections.deque()
+        spec_wanted = 0
 
         def issue(hosts, tickets, phase_id, pts, alphas, validates):
             k = hosts.size
@@ -109,31 +179,80 @@ class BatchedVolunteerGrid:
             a_alpha[hosts] = alphas
             a_point[hosts] = pts
 
+        def flush_one():
+            p = pending.popleft()
+            ys = np.full(p.d_phase.size, np.nan)
+            if p.handle is not None:
+                t0 = time.perf_counter()
+                ys_live = self.backend.collect(p.handle)
+                self.stats.device_blocked_s += time.perf_counter() - t0
+                ys[p.live_mask] = ys_live
+            engine.assimilate_arrays(p.d_phase, p.d_ticket, p.d_point,
+                                     p.d_alpha, p.d_validates, ys)
+            self.stats.completed += int(p.d_phase.size)
+            self.stats.batched_evals += int(p.live_n)
+
+        def flush_all():
+            while pending:
+                flush_one()
+
+        def throttled_ask(idle_n, wanted):
+            """Issuance throttle: top outstanding current-phase work up to
+            ``wanted × overcommit`` — the ONE definition both the
+            speculative and the engine-current paths share (a one-sided
+            edit here would silently break the sync==pipelined parity)."""
+            in_flight = int(np.sum(busy & (req_phase == engine.phase_id)))
+            cap = int(np.ceil(wanted * self.overcommit))
+            return min(idle_n, max(cap - in_flight, 0))
+
         while not engine.done and self.stats.ticks < max_ticks \
                 and now <= max_sim_time:
             idle = np.flatnonzero(~busy & (online <= now))
             if idle.size:
-                in_flight = int(np.sum(busy & (req_phase == engine.phase_id)))
-                cap = int(np.ceil(engine.wanted() * self.overcommit))
-                k_ask = min(int(idle.size), max(cap - in_flight, 0))
-                block = engine.generate_block(k_ask) if k_ask else None
-                if block is not None:
-                    tickets, phase_id, pts, alphas = block
-                    issue(idle[:len(tickets)], tickets, phase_id, pts,
-                          alphas, -1)
-                elif k_ask or engine.validating:
-                    # bootstrap probes and quorum replicas are handed out as
-                    # objects (tiny phases); reissue a replica if every
-                    # pending one was lost in flight, or the run deadlocks
-                    reqs = engine.generate(k_ask) if k_ask else []
-                    if not reqs and engine.validating and in_flight == 0:
-                        r = engine.reissue_validation()
-                        reqs = [r] if r is not None else []
-                    for h, r in zip(idle, reqs):
-                        issue(np.array([h]), r.ticket, r.phase_id,
-                              r.point, r.alpha,
-                              -1 if r.validates is None else r.validates)
+                if pending:
+                    # speculated state: results are still in flight, but
+                    # they provably cannot flip the phase (spec_wanted > 0),
+                    # so current-phase issuance needs no ys — generate the
+                    # next block via the engine's revertible peek
+                    k_ask = throttled_ask(int(idle.size), spec_wanted)
+                    if k_ask:
+                        block = engine.peek_block(k_ask)
+                        if block is None:
+                            # the no-flip invariant guarantees a block
+                            # phase here; if it ever breaks, roll the peek
+                            # back and fall off the speculative path
+                            engine.cancel_block()
+                            self.stats.spec_discarded += 1
+                            flush_all()
+                        else:
+                            self.stats.spec_blocks += 1
+                            tickets, phase_id, pts, alphas = block
+                            issue(idle[:len(tickets)], tickets, phase_id,
+                                  pts, alphas, -1)
+                            engine.accept_block()
+                if not pending:
+                    k_ask = throttled_ask(int(idle.size), engine.wanted())
+                    block = engine.generate_block(k_ask) if k_ask else None
+                    if block is not None:
+                        tickets, phase_id, pts, alphas = block
+                        issue(idle[:len(tickets)], tickets, phase_id, pts,
+                              alphas, -1)
+                    elif k_ask or engine.validating:
+                        # bootstrap probes and quorum replicas are handed
+                        # out as objects (tiny phases); reissue a replica if
+                        # every pending one was lost in flight, or the run
+                        # deadlocks
+                        reqs = engine.generate(k_ask) if k_ask else []
+                        if not reqs and engine.validating and not np.any(
+                                busy & (req_phase == engine.phase_id)):
+                            r = engine.reissue_validation()
+                            reqs = [r] if r is not None else []
+                        for h, r in zip(idle, reqs):
+                            issue(np.array([h]), r.ticket, r.phase_id,
+                                  r.point, r.alpha,
+                                  -1 if r.validates is None else r.validates)
             if not busy.any():
+                flush_all()
                 now += cfg.idle_retry
                 continue
 
@@ -148,9 +267,13 @@ class BatchedVolunteerGrid:
             # while validating, the phase needs the full outstanding quorum
             # (wanted() is 0 once replicas are handed out) — jump to the
             # last missing vote in ONE tick instead of draining one replica
-            # per tick
-            want = (engine.validation_votes_outstanding if engine.validating
-                    else engine.wanted())
+            # per tick.  With ticks in flight the phase is mid-regression/
+            # line-search and the remaining need is the exact prediction.
+            if pending:
+                want = spec_wanted
+            else:
+                want = (engine.validation_votes_outstanding
+                        if engine.validating else engine.wanted())
             # the horizon counts LIVE completions: a host that will drop its
             # result can't contribute the k-th arrival the phase is waiting
             # for, and the simulator already knows the drop (it drew it at
@@ -166,32 +289,35 @@ class BatchedVolunteerGrid:
             ready = ready[np.lexsort((ready, t_done[ready]))]  # completion order
 
             delivered = ready[~lost[ready]]
+            tick = None
             if delivered.size:
-                # pay f_batch only for results the engine can still use:
+                # pay the backend only for results the engine can still use:
                 # workunits from an already-finished phase are provably
                 # discarded by the engine's phase_id check BEFORE it reads
-                # y, so stale lanes are delivered with NaN instead of an
+                # y, so stale lanes are delivered as NaN without an
                 # evaluation — the engine's decisions and stale counts are
                 # identical, the wasted fitness work is not
                 live_mask = req_phase[delivered] == engine.phase_id
-                ys = np.full(delivered.size, np.nan)
                 live = delivered[live_mask]
+                handle = None
                 if live.size:
-                    ys_live = self._eval_padded(a_point[live])
+                    # corruption ships WITH the bucket as mask lanes (NaN ==
+                    # honest) and is applied on-device; same sign-safe model
+                    # and rng draw order as the per-event simulator
                     mal = self.malicious[live]
+                    mal_u = np.full(live.size, np.nan)
                     if mal.any():
-                        # same sign-safe corruption model as the per-event
-                        # simulator (grid.malicious_lie)
-                        ys_live[mal] = malicious_lie(
-                            ys_live[mal], rng.uniform(0.2, 0.8, int(mal.sum())))
+                        mal_u[mal] = rng.uniform(0.2, 0.8, int(mal.sum()))
                         self.stats.corrupted += int(mal.sum())
-                    ys[live_mask] = ys_live
-                engine.assimilate_arrays(
-                    req_phase[delivered], a_ticket[delivered],
-                    a_point[delivered], a_alpha[delivered],
-                    a_validates[delivered], ys)
-                self.stats.completed += int(delivered.size)
-                self.stats.batched_evals += int(live.size)
+                    handle = self.backend.submit(a_point[live], mal_u)
+                    self.stats.batch_calls += 1
+                    self.stats.bucket_hist[handle.kp] = \
+                        self.stats.bucket_hist.get(handle.kp, 0) + 1
+                tick = _PendingTick(handle, req_phase[delivered],
+                                    a_ticket[delivered], a_point[delivered],
+                                    a_alpha[delivered],
+                                    a_validates[delivered],
+                                    live_mask, int(live.size))
             busy[ready] = False
             lost[ready] = False
             t_done[ready] = np.inf
@@ -199,5 +325,37 @@ class BatchedVolunteerGrid:
             a_ticket[ready] = -1
             a_validates[ready] = -1
             self.stats.ticks += 1
+
+            if tick is not None:
+                if pending:
+                    base = spec_wanted
+                    block_phase = True       # invariant: mid-REG/LS
+                else:
+                    block_phase = engine.phase in (REGRESSION, LINESEARCH)
+                    base = engine.wanted() if block_phase else 0
+                pending.append(tick)
+                # depth counts actual device buckets, not handle-less
+                # stale-only ticks riding the queue
+                self.stats.max_in_flight = max(
+                    self.stats.max_in_flight,
+                    sum(1 for t in pending if t.handle is not None))
+                if (self.pipelined and block_phase
+                        and base - tick.live_n > 0):
+                    # in-phase results (a stale-only tick included: its
+                    # live_n of 0 cannot flip anything): defer the collect,
+                    # keep the device busy while the host runs ahead
+                    spec_wanted = base - tick.live_n
+                    if len(pending) >= self.pipeline_depth:
+                        flush_one()
+                else:
+                    # this bucket reaches the phase's m (or the phase is
+                    # bootstrap/validating, whose votes decide transitions):
+                    # assimilation must decide, so drain the pipeline
+                    flush_all()
+        flush_all()
         self.stats.sim_time = now
+        # accumulate like every other stats field: this run's wall minus
+        # this run's device-blocked share (not the all-runs cumulative)
+        self.stats.host_s += (time.perf_counter() - t_run0
+                              - (self.stats.device_blocked_s - blocked0))
         return self.stats

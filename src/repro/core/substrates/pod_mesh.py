@@ -9,6 +9,12 @@ data shard evaluate its ``kp / n_shards`` rows in parallel.  The ``model``
 axis is left for the fitness function itself (a replicated closure today;
 a model-sharded likelihood slots in without touching the grid).
 
+The backend speaks the shared async ``submit``/``collect`` protocol
+(DESIGN.md §7): the shard_map'd evaluation is traced inside the base
+class's jitted bucket finalization, so corruption lanes and pad-NaN
+masking happen on-device here exactly as in-process, and the bucket
+ladder is warmed at construction when ``n_dims``/``max_bucket`` are given.
+
 Key properties (DESIGN.md §6):
 
   * buckets are powers of two with a floor at the shard count, so every
@@ -16,8 +22,7 @@ Key properties (DESIGN.md §6):
     O(log k_max) shapes — shapes depend on the block size and shard count,
     never on the grid's host count;
   * remainder lanes (k < bucket) are padded with the last real point and
-    masked off the result by the shared ``EvalBackend`` framing — never
-    dropped;
+    come back NaN-masked by the shared on-device framing — never dropped;
   * rows are evaluated by the SAME per-row computation as in-process
     (``f_batch`` is row-independent), so a given engine seed commits
     bit-identical iterates on either backend — pinned by
@@ -25,9 +30,7 @@ Key properties (DESIGN.md §6):
 """
 from __future__ import annotations
 
-from typing import Callable
-
-import numpy as np
+from typing import Callable, Optional
 
 from repro.core.substrates.eval_backend import EvalBackend, bucket_size
 
@@ -57,8 +60,9 @@ class PodMeshEvalBackend(EvalBackend):
     ``make_data_mesh()``.
     """
 
-    def __init__(self, f_batch: Callable, mesh=None, data_axis: str = "data"):
-        import jax
+    def __init__(self, f_batch: Callable, mesh=None, data_axis: str = "data",
+                 *, n_dims: Optional[int] = None,
+                 max_bucket: Optional[int] = None):
         from jax.experimental.shard_map import shard_map
         from jax.sharding import PartitionSpec as P
 
@@ -69,17 +73,19 @@ class PodMeshEvalBackend(EvalBackend):
             raise ValueError(
                 f"data axis must be a power of two to divide the "
                 f"power-of-two buckets, got {self.n_shards}")
+        self.f_batch = f_batch
+        self._sharded = shard_map(
+            f_batch, mesh=self.mesh,
+            in_specs=P(data_axis, None), out_specs=P(data_axis))
         # floor of 4 rows per shard: XLA CPU picks a different (last-ulp
         # divergent) vectorization for 2-row sub-batches (observed on jax
         # 0.4.37 — every other width is bitwise-stable), and bit-identical
         # iterates vs the in-process backend are a hard contract of this
         # seam.  The parity gates (tests + dryrun smoke + shootout) exist
         # to catch any future regression of this property.
-        self.min_bucket = bucket_size(4 * self.n_shards)
-        self._eval = jax.jit(shard_map(
-            f_batch, mesh=self.mesh,
-            in_specs=P(data_axis, None), out_specs=P(data_axis)))
+        super().__init__(bucket_size(4 * self.n_shards))
+        if n_dims is not None and max_bucket is not None:
+            self.warm(n_dims, max_bucket)
 
-    def _eval_bucket(self, pts: np.ndarray) -> np.ndarray:
-        import jax.numpy as jnp
-        return self._eval(jnp.asarray(pts, jnp.float32))
+    def _raw_eval(self, pts):
+        return self._sharded(pts)

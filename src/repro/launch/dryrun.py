@@ -10,10 +10,12 @@ record memory_analysis / cost_analysis / per-kind collective bytes into
 artifacts/dryrun/<arch>__<shape>__<mesh>.json for the roofline report.
 
 ``--substrate pod_mesh`` instead runs the batched-grid substrate smoke:
-the same ANM workload through the in-process backend and the shard_map
-pod-mesh backend on the forced 512-device host platform, requiring
-bit-identical committed iterates (DESIGN.md §6) — so the production
-partitioning is exercised on CPU before any TPU time is spent.
+the same ANM workload through the in-process backend (synchronous and
+PIPELINED tick loops) and the pipelined shard_map pod-mesh backend on the
+forced 512-device host platform, requiring bit-identical committed
+iterates across all three (DESIGN.md §6–§7) — so the production
+partitioning AND the async submit/collect path are exercised on CPU
+before any TPU time is spent.
 
 Usage:
     python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k
@@ -189,13 +191,15 @@ def run_cell(arch, shape_name, multi_pod, out_dir, skip_existing=False,
 
 def run_substrate_smoke(out_dir: str, m: int = 32, iterations: int = 2,
                         n_stars: int = 500, n_hosts: int = 512) -> bool:
-    """Pod-mesh substrate smoke (the ``--substrate pod_mesh`` path).
+    """Pod-mesh + pipelined substrate smoke (``--substrate pod_mesh``).
 
-    Runs the SAME batched-grid workload twice — in-process backend, then
-    ``PodMeshEvalBackend`` shard_mapping every bucket over the production
-    (data=16, model=16) mesh of forced host devices — and requires
-    identical committed centers, fitness history and iteration counts.
-    Writes artifacts/dryrun/substrate_pod_mesh.json; returns pass/fail.
+    Runs the SAME batched-grid workload three ways — in-process backend
+    with the synchronous tick loop (the reference), in-process PIPELINED,
+    and ``PodMeshEvalBackend`` pipelined with every bucket shard_mapped
+    over the production (data=16, model=16) mesh of forced host devices —
+    and requires identical committed centers, fitness history and
+    iteration counts across all three (DESIGN.md §6–§7).  Writes
+    artifacts/dryrun/substrate_pod_mesh.json; returns pass/fail.
     """
     import numpy as np
     from repro.core.anm import AnmConfig
@@ -216,17 +220,28 @@ def run_substrate_smoke(out_dir: str, m: int = 32, iterations: int = 2,
     grid_cfg = GridConfig(n_hosts=n_hosts, failure_prob=0.05,
                           malicious_prob=0.01, seed=9)
 
-    def run_with(backend):
+    def run_with(backend, pipelined):
         engine = AnmEngine(x0, sdss.LO, sdss.HI, sdss.DEFAULT_STEP,
                            anm_cfg, seed=7)
         t0 = time.time()
-        stats = BatchedVolunteerGrid(f_batch, grid_cfg,
-                                     backend=backend).run(engine)
+        stats = BatchedVolunteerGrid(f_batch, grid_cfg, backend=backend,
+                                     pipelined=pipelined).run(engine)
         return engine, stats, time.time() - t0
 
-    e_in, s_in, t_in = run_with(None)          # default in-process backend
-    pod = PodMeshEvalBackend(f_batch, mesh=mesh)
-    e_pod, s_pod, t_pod = run_with(pod)
+    # one backend per evaluation target, shared across loop modes and
+    # warmed over the whole bucket ladder at construction, so NO timed
+    # window below pays a compile — otherwise the first (sync) run would
+    # absorb the ladder and bias the sync-vs-pipelined comparison
+    from repro.core.substrates.eval_backend import (InProcessEvalBackend,
+                                                    bucket_size)
+    max_bucket = bucket_size(BatchedVolunteerGrid.warm_max_bucket(m))
+    in_backend = InProcessEvalBackend(f_batch, n_dims=8,
+                                      max_bucket=max_bucket)
+    e_in, s_in, t_in = run_with(in_backend, False)   # in-process, sync
+    e_pin, s_pin, t_pin = run_with(in_backend, True)  # in-process, pipelined
+    pod = PodMeshEvalBackend(f_batch, mesh=mesh, n_dims=8,
+                             max_bucket=max_bucket)
+    e_pod, s_pod, t_pod = run_with(pod, True)         # pod mesh, pipelined
 
     centers_equal = (
         len(e_in.history) == len(e_pod.history) and
@@ -234,15 +249,30 @@ def run_substrate_smoke(out_dir: str, m: int = 32, iterations: int = 2,
             for a, b in zip(e_in.history, e_pod.history)))
     fitness_equal = [r.best_fitness for r in e_in.history] == \
         [r.best_fitness for r in e_pod.history]
-    ok = identical_trajectories(e_in, e_pod)
+    pipelined_ok = identical_trajectories(e_in, e_pin)
+    pod_ok = identical_trajectories(e_in, e_pod)
+    ok = pipelined_ok and pod_ok
     report = {
         "mesh": "16x16", "data_shards": pod.n_shards,
         "min_bucket": pod.min_bucket, "n_hosts": n_hosts, "m": m,
-        "iterations": {"in_process": e_in.iteration, "pod_mesh": e_pod.iteration},
-        "final": {"in_process": e_in.best_fitness, "pod_mesh": e_pod.best_fitness},
-        "batch_calls": {"in_process": s_in.batch_calls, "pod_mesh": s_pod.batch_calls},
-        "wall_s": {"in_process": round(t_in, 3), "pod_mesh": round(t_pod, 3)},
+        "iterations": {"in_process": e_in.iteration,
+                       "in_process_pipelined": e_pin.iteration,
+                       "pod_mesh": e_pod.iteration},
+        "final": {"in_process": e_in.best_fitness,
+                  "in_process_pipelined": e_pin.best_fitness,
+                  "pod_mesh": e_pod.best_fitness},
+        "batch_calls": {"in_process": s_in.batch_calls,
+                        "in_process_pipelined": s_pin.batch_calls,
+                        "pod_mesh": s_pod.batch_calls},
+        "wall_s": {"in_process": round(t_in, 3),
+                   "in_process_pipelined": round(t_pin, 3),
+                   "pod_mesh": round(t_pod, 3)},
+        "pipeline": {"spec_blocks": s_pin.spec_blocks,
+                     "spec_discarded": s_pin.spec_discarded,
+                     "max_in_flight": s_pin.max_in_flight,
+                     "pod_max_in_flight": s_pod.max_in_flight},
         "centers_equal": centers_equal, "fitness_equal": fitness_equal,
+        "pipelined_parity_ok": pipelined_ok, "pod_parity_ok": pod_ok,
         "parity_ok": ok,
     }
     path = os.path.join(out_dir, "substrate_pod_mesh.json")
@@ -250,9 +280,10 @@ def run_substrate_smoke(out_dir: str, m: int = 32, iterations: int = 2,
         json.dump(report, f, indent=2)
     print(f"[{'ok' if ok else 'FAIL'}] substrate pod_mesh: "
           f"{pod.n_shards} data shards, iters "
-          f"{e_in.iteration}/{e_pod.iteration}, final "
-          f"{e_in.best_fitness:.6f}/{e_pod.best_fitness:.6f}, "
-          f"wall {t_in:.2f}s/{t_pod:.2f}s -> {path}")
+          f"{e_in.iteration}/{e_pin.iteration}/{e_pod.iteration}, final "
+          f"{e_in.best_fitness:.6f}/{e_pin.best_fitness:.6f}/"
+          f"{e_pod.best_fitness:.6f}, wall {t_in:.2f}s/{t_pin:.2f}s/"
+          f"{t_pod:.2f}s (sync/pipelined/pod-pipelined) -> {path}")
     return ok
 
 

@@ -52,20 +52,29 @@ def test_bucket_size_power_of_two_with_floor():
 
 def test_backend_pads_to_buckets_and_masks_remainder():
     f_batch, n = _quad_fitness()
-    seen = []
-
-    def recording(xs):
-        seen.append(xs.shape[0])
-        return f_batch(xs)
-
-    be = InProcessEvalBackend(recording)
+    be = InProcessEvalBackend(f_batch)
+    kps = []
     for k in (1, 5, 8, 13, 64, 100):
         pts = np.random.default_rng(k).uniform(-1, 1, (k, n))
-        ys = be(pts)
+        handle = be.submit(pts)
+        kps.append(handle.kp)
+        ys = be.collect(handle)
         assert ys.shape == (k,)              # remainder masked, not dropped
         ref = np.asarray(f_batch(jnp.asarray(pts, jnp.float32)), np.float64)
         np.testing.assert_array_equal(ys, ref)
-    assert seen == [bucket_size(k) for k in (1, 5, 8, 13, 64, 100)]
+    assert kps == [bucket_size(k) for k in (1, 5, 8, 13, 64, 100)]
+
+
+def test_min_bucket_validated_directly():
+    """The floor argument is validated as a power of two — not silently
+    rounded through bucket_size — and lives in one documented place."""
+    from repro.core.substrates.eval_backend import DEFAULT_MIN_BUCKET
+    f_batch, _ = _quad_fitness()
+    assert InProcessEvalBackend(f_batch).min_bucket == DEFAULT_MIN_BUCKET
+    assert InProcessEvalBackend(f_batch, min_bucket=2).min_bucket == 2
+    for bad in (0, 3, 12, -8):
+        with pytest.raises(ValueError):
+            InProcessEvalBackend(f_batch, min_bucket=bad)
 
 
 def test_pod_backend_bucket_floor_is_shard_count():
@@ -134,8 +143,11 @@ def test_dryrun_pod_mesh_smoke_parity(tmp_path):
     assert proc.returncode == 0, proc.stdout + proc.stderr
     report = json.loads((tmp_path / "substrate_pod_mesh.json").read_text())
     assert report["parity_ok"] is True
+    assert report["pipelined_parity_ok"] is True
+    assert report["pod_parity_ok"] is True
     assert report["centers_equal"] is True
     assert report["fitness_equal"] is True
     assert report["data_shards"] == 16
     assert report["iterations"]["in_process"] == \
-        report["iterations"]["pod_mesh"]
+        report["iterations"]["pod_mesh"] == \
+        report["iterations"]["in_process_pipelined"]
