@@ -3,12 +3,13 @@
 Prints ``name,us_per_call,derived`` CSV.  ``python -m benchmarks.run``.
 
 ``--smoke`` runs a CI-sized subset (currently the scalability module's
-substrate + pipelined shootouts, including the pod-mesh parity,
-sharding-overhead and pipelined-vs-sync parity/speedup gates) so
-regressions in the batched grid substrate, its evaluation backends and
-the pipelined tick loop are caught on every push without paying for the
-full sweeps.  Both shootouts also refresh the repo-root
-``BENCH_scalability.json`` perf ledger.
+substrate + pipelined + multi-search shootouts, including the pod-mesh
+parity, sharding-overhead, pipelined-vs-sync and coalesced-vs-serial
+parity/speedup gates) so regressions in the batched grid substrate, its
+evaluation backends, the pipelined tick loop and the multi-search
+orchestrator are caught on every push without paying for the full
+sweeps.  The shootouts also refresh the repo-root
+``BENCH_scalability.json`` perf ledger (platform-stamped per entry).
 """
 from __future__ import annotations
 

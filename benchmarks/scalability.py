@@ -23,9 +23,18 @@ grid substrates driving the same ``AnmEngine`` workload:
     gates compare best-of wall-clock across alternating repetitions, the
     standard de-noising statistic for sub-second runs).
 
+  * NEW (DESIGN.md §8): the MULTI-SEARCH shootout — an 8-search portfolio
+    coalesced over one shared backend by the orchestrator vs the same 8
+    specs run serially (each alone, pipelined, same warmed backend).
+    Gates: every orchestrated search commits BIT-IDENTICAL iterates to
+    its serial twin, and the coalesced portfolio beats the serial runs by
+    ≥1.5× wall-clock at the full workload (≥1.1× in smoke).
+
 Every row lands in artifacts/benchmarks/scalability.json AND in the
-repo-root ``BENCH_scalability.json`` (wall-clock rows + speedups), so the
-perf trajectory is tracked across PRs.
+repo-root ``BENCH_scalability.json`` (wall-clock rows + speedups + the
+recording platform's metadata — python/jax/numpy versions, cpu count,
+backend — so numbers from different machines are never silently
+compared), so the perf trajectory is tracked across PRs.
 
 ``--smoke`` (or ``run.py --smoke``) runs a down-scaled version of those
 gates for CI.
@@ -44,6 +53,8 @@ from repro.core.anm import AnmConfig
 from repro.core.engine import AnmEngine, identical_trajectories
 from repro.core.fgdo import FgdoAnmServer
 from repro.core.grid import GridConfig, VolunteerGrid
+from repro.core.orchestrator import (FleetScheduler, SearchDirector,
+                                     multi_start_specs)
 from repro.core.substrates.batched_grid import BatchedVolunteerGrid
 from repro.core.substrates.eval_backend import InProcessEvalBackend, bucket_size
 from repro.core.substrates.pod_mesh import PodMeshEvalBackend
@@ -57,6 +68,28 @@ BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
 
 POD_M_SCALE = 8                       # pod-mesh row runs at 8x the batched m
 PIPE_REPS = 7                         # alternating timing reps (best-of gates)
+MS_SEARCHES = 8                       # multi-search shootout portfolio size
+MS_REPS = 5                           # its alternating timing reps
+
+
+def _platform_meta():
+    """The recording machine, stamped into every ledger entry: wall-clock
+    rows from a 2-core CI runner and a 64-core workstation are NOT
+    comparable, and without this stamp nothing stops a future PR from
+    comparing them silently."""
+    import platform as _pf
+
+    import jax
+    return {
+        "python": _pf.python_version(),
+        "jax": jax.__version__,
+        "numpy": np.__version__,
+        "cpu_count": os.cpu_count(),
+        "jax_backend": jax.default_backend(),
+        "jax_device_count": jax.device_count(),
+        "machine": _pf.machine(),
+        "system": _pf.system(),
+    }
 
 
 def _grid_stats_row(stats):
@@ -238,11 +271,98 @@ def _pipelined_shootout(n_hosts: int, m: int, tick_batch: int, iters: int):
             wall_sync / max(wall_pipe, 1e-9), parity_ok)
 
 
+def _multi_search_shootout(n_searches: int, n_hosts: int, m: int,
+                           tick_batch: int, iters: int):
+    """Coalesced multi-search portfolio vs the SAME specs run serially
+    (DESIGN.md §8).  Both sides share one warmed backend and the exact
+    per-search sub-fleets/seeds, so the serial runs double as the parity
+    baseline: every orchestrated search must commit bit-identical
+    iterates to its serial twin.  The speed story is dispatch + padding
+    amortization — per round, K searches' tick blocks ride ONE shared
+    tagged bucket instead of K small ones — so the workload sits in the
+    latency-bound regime (small stripe, narrow ticks) where per-dispatch
+    overhead, not fitness FLOPs, bounds the serial side.  Wall-clock is
+    best-of ``MS_REPS`` alternating reps, like the pipelined row.
+    Returns (serial_row, coalesced_row, speedup, parity_ok)."""
+    stripe = sdss.make_stripe("multisearch", n_stars=200, n_quad=256,
+                              seed=29)
+    f_batch, _ = sdss.make_fitness(stripe)
+    rng = np.random.default_rng(3)
+    x0 = np.clip(stripe.truth + rng.normal(0, 0.2, 8).astype(np.float32),
+                 sdss.LO, sdss.HI)
+    anm_cfg = AnmConfig(m_regression=m, m_line_search=m,
+                        max_iterations=iters)
+    fleet = GridConfig(n_hosts=n_hosts, failure_prob=0.05,
+                       malicious_prob=0.01, seed=9)
+    backend = InProcessEvalBackend(f_batch)
+    # specs derive from the fleet config alone (deterministic sub-fleets),
+    # so one scheduler instance can mint them for both sides; warming the
+    # COALESCED ladder up front keeps every compile out of the timed reps
+    sched0 = FleetScheduler(backend, fleet, tick_batch=tick_batch)
+    specs = multi_start_specs(sched0, x0, sdss.LO, sdss.HI,
+                              sdss.DEFAULT_STEP, anm_cfg, n_searches,
+                              seed=7, jitter=0.3)
+    sched0.warm(len(x0), specs)
+
+    def run_serial():
+        engines = []
+        t0 = time.perf_counter()
+        for spec in specs:
+            engines.append(spec.solo_run(backend, tick_batch=tick_batch))
+        return engines, time.perf_counter() - t0
+
+    def run_coalesced():
+        sched = FleetScheduler(backend, fleet, tick_batch=tick_batch)
+        director = SearchDirector(sched, specs)
+        t0 = time.perf_counter()
+        res = director.run()
+        return res, time.perf_counter() - t0
+
+    run_coalesced(), run_serial()              # warm every shared jit
+    t_ser, t_co = [], []
+    for _ in range(MS_REPS):                   # alternate: noise hits both
+        engines, t = run_serial()              # deterministic per seed, so
+        t_ser.append(t)                        # the last rep serves the
+        res, t = run_coalesced()               # rows + the parity gate
+        t_co.append(t)
+    parity_ok = all(
+        identical_trajectories(o.engine, e) and o.engine.stats == e.stats
+        for o, e in zip(res.outcomes, engines))
+    wall_ser, wall_co = min(t_ser), min(t_co)
+    co = res.coalesce_stats
+    serial_row = {
+        "substrate": "serial_engines", "n_searches": n_searches,
+        "m": m, "tick_batch": tick_batch, "wall_s": wall_ser,
+        "wall_s_reps": [round(t, 4) for t in t_ser],
+        "final": [e.best_fitness for e in engines],
+        "iterations": [e.iteration for e in engines],
+        "parity_ok": parity_ok,
+    }
+    coalesced_row = {
+        "substrate": "multi_search_coalesced", "n_searches": n_searches,
+        "m": m, "tick_batch": tick_batch, "wall_s": wall_co,
+        "wall_s_reps": [round(t, 4) for t in t_co],
+        "final": [o.engine.best_fitness for o in res.outcomes],
+        "iterations": [o.engine.iteration for o in res.outcomes],
+        "parity_ok": parity_ok,
+        "rounds": res.rounds,
+        "dispatches": co.dispatches,
+        "lane_blocks": co.lane_blocks,
+        "blocks_per_dispatch": co.lane_blocks / max(co.dispatches, 1),
+        "padded_lanes": co.padded_lanes,
+        "solo_padded_lanes": co.solo_padded_lanes,
+        "forced_flushes": co.forced_flushes,
+        "ring_drains": co.ring_drains,
+    }
+    return (serial_row, coalesced_row,
+            wall_ser / max(wall_co, 1e-9), parity_ok)
+
+
 def run(out_dir=None, n_stars=8_000, smoke: bool = False):
     out_dir = out_dir or os.path.abspath(OUT)
     os.makedirs(out_dir, exist_ok=True)
     results = {"hosts_sweep": [], "fault_sweep": [], "substrate_shootout": {},
-               "pipelined_shootout": {}}
+               "pipelined_shootout": {}, "multi_search_shootout": {}}
 
     if not smoke:
         stripe = sdss.make_stripe("scal", n_stars=n_stars, seed=21)
@@ -338,6 +458,28 @@ def run(out_dir=None, n_stars=8_000, smoke: bool = False):
          f"target>={min_pipe}x;sync_s={sync_row['wall_s']:.3f};"
          f"pipe_s={pipe_row['wall_s']:.3f}")
 
+    # -- multi-search orchestrator: coalesced vs serial (DESIGN.md §8) -------
+    if smoke:
+        ms_hosts, ms_m, ms_tick, ms_iters, min_ms = 512, 128, 8, 1, 1.1
+    else:
+        ms_hosts, ms_m, ms_tick, ms_iters, min_ms = 512, 256, 8, 2, 1.5
+    ser_row, co_row, ms_speedup, ms_parity_ok = \
+        _multi_search_shootout(MS_SEARCHES, ms_hosts, ms_m, ms_tick,
+                               ms_iters)
+    results["multi_search_shootout"] = {
+        "n_searches": MS_SEARCHES, "fleet_hosts": ms_hosts,
+        "serial": ser_row, "coalesced": co_row, "speedup": ms_speedup}
+    emit(f"scal_multisearch_serial_{MS_SEARCHES}x", ser_row["wall_s"] * 1e6,
+         f"m={ms_m};tick={ms_tick};iters={ms_iters}")
+    emit(f"scal_multisearch_coalesced_{MS_SEARCHES}x",
+         co_row["wall_s"] * 1e6,
+         f"m={ms_m};tick={ms_tick};dispatches={co_row['dispatches']};"
+         f"blocks_per_dispatch={co_row['blocks_per_dispatch']:.1f};"
+         f"parity={'ok' if ms_parity_ok else 'FAIL'}")
+    emit(f"scal_multisearch_speedup_{MS_SEARCHES}x", ms_speedup,
+         f"target>={min_ms}x;serial_s={ser_row['wall_s']:.3f};"
+         f"coalesced_s={co_row['wall_s']:.3f}")
+
     with open(os.path.join(out_dir, "scalability.json"), "w") as f:
         json.dump(results, f, indent=2)
     # repo-root perf ledger: the wall-clock rows + speedups only, one file
@@ -352,14 +494,17 @@ def run(out_dir=None, n_stars=8_000, smoke: bool = False):
     except (OSError, ValueError):
         ledger = {}
     ledger["smoke" if smoke else "full"] = {
-        "rows": [ev, bt, pod, sync_row, pipe_row],
+        "rows": [ev, bt, pod, sync_row, pipe_row, ser_row, co_row],
         "speedups": {
             "batched_vs_per_event": speedup,
             "pod_sharding_overhead": pod_overhead,
             "pod_vs_batched_m_wall_ratio": pod_econ,
             "pipelined_vs_sync": pipe_speedup,
+            "multi_search_coalesced_vs_serial": ms_speedup,
         },
-        "parity": {"pod_mesh": pod_parity_ok, "pipelined": pipe_parity_ok},
+        "parity": {"pod_mesh": pod_parity_ok, "pipelined": pipe_parity_ok,
+                   "multi_search": ms_parity_ok},
+        "platform": _platform_meta(),
     }
     with open(bench_path, "w") as f:
         json.dump(ledger, f, indent=2)
@@ -392,6 +537,15 @@ def run(out_dir=None, n_stars=8_000, smoke: bool = False):
             f"pipelined tick loop {pipe_speedup:.2f}x below the "
             f"{min_pipe}x floor (sync {sync_row['wall_s']:.3f}s vs "
             f"pipelined {pipe_row['wall_s']:.3f}s at {p_hosts} hosts)")
+    if not ms_parity_ok:
+        raise RuntimeError(
+            "a coalesced multi-search engine diverged from its serial twin "
+            "at the same seed — committed iterates must be bit-identical")
+    if ms_speedup < min_ms:
+        raise RuntimeError(
+            f"coalesced {MS_SEARCHES}-search portfolio {ms_speedup:.2f}x "
+            f"below the {min_ms}x floor (serial {ser_row['wall_s']:.3f}s "
+            f"vs coalesced {co_row['wall_s']:.3f}s)")
     return results
 
 

@@ -18,3 +18,10 @@ from repro.core.subspace_newton import (  # noqa: F401
     init_state,
     subspace_newton_step,
 )
+from repro.core.orchestrator import (  # noqa: F401
+    FleetScheduler,
+    MultiSearchResult,
+    SearchDirector,
+    SearchSpec,
+    multi_start_specs,
+)

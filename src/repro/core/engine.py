@@ -191,8 +191,9 @@ class AnmEngine:
         self._bootstrapping = False   # validating the f(x0) probe itself
         self._line_avg = float("nan")
         # block-speculation snapshot (peek_block/cancel_block): rng state +
-        # ticket counter + issuance stat, enough to make a speculatively
-        # generated block fully revertible
+        # ticket counter + issuance stats + validation ticket state, enough
+        # to make a speculatively generated block fully revertible even
+        # when the peek lands mid-validation
         self._spec_snapshot: Optional[Tuple] = None
 
     # -- introspection ------------------------------------------------------
@@ -333,9 +334,19 @@ class AnmEngine:
         stream, ticket counter and issuance stat as if the peek never
         happened, so a discarded speculation is invisible to the committed
         trajectory.  ``accept_block()`` (or the next peek) drops the
-        snapshot once the block has really been handed out."""
+        snapshot once the block has really been handed out.
+
+        The snapshot also covers the validation ticket state
+        (``stats.validations_issued`` and the pending-replica budget): a
+        peek taken while a validation is pending generates nothing (blocks
+        only exist in regression/line-search), but the cancel must still
+        leave the quorum bookkeeping exactly as it found it — a substrate
+        that interleaves peeks with validation phases (the multi-search
+        orchestrator steps many engines in one loop) relies on that."""
         self._spec_snapshot = (self.rng.bit_generator.state,
-                               self._next_ticket, self.stats.issued)
+                               self._next_ticket, self.stats.issued,
+                               self.stats.validations_issued,
+                               self._pending_validation)
         return self.generate_block(k)
 
     def accept_block(self) -> None:
@@ -345,13 +356,16 @@ class AnmEngine:
 
     def cancel_block(self) -> None:
         """Discard the last peeked block, rewinding every side effect of
-        the peek (rng stream, tickets, ``stats.issued``)."""
+        the peek (rng stream, tickets, ``stats.issued``, and the
+        validation ticket state the snapshot carries)."""
         if self._spec_snapshot is None:
             return
-        state, ticket, issued = self._spec_snapshot
+        state, ticket, issued, val_issued, val_pending = self._spec_snapshot
         self.rng.bit_generator.state = state
         self._next_ticket = ticket
         self.stats.issued = issued
+        self.stats.validations_issued = val_issued
+        self._pending_validation = val_pending
         self._spec_snapshot = None
 
     def reissue_validation(self) -> Optional[EvalRequest]:

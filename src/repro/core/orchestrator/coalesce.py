@@ -1,0 +1,210 @@
+"""Cross-search bucket coalescing over one shared EvalBackend (DESIGN.md §8).
+
+K concurrent searches submitting their tick blocks separately pay K device
+dispatches per scheduling round, and every small block rounds up to its own
+power-of-two bucket — at multi-search scale the padding and the dispatch
+round-trips, not the fitness FLOPs, dominate.  ``CoalescingSubmitter``
+closes both holes: within a scheduling round, each search's block is
+appended to one OPEN shared round; the round dispatches as a single
+backend bucket whose lanes are tagged with the submitting search's id
+(``EvalHandle.tags`` — per-lane attribution for observability; the demux
+itself is positional), and each search gets back a ``LaneSlice`` — a
+lazy handle onto its contiguous lane range of the shared result.
+
+Why coalescing cannot change what any engine observes (the safety
+argument, pinned by the parity gates): a backend bucket is row-
+independent — ``f_batch`` maps each lane to its fitness with no cross-lane
+terms, the malicious-corruption mask and the pad-NaN mask are per-lane,
+and every bucket width the ladder can produce sits in XLA's bitwise-stable
+vectorization regime (the pod backend's 4-rows-per-shard floor exists for
+exactly the one known-divergent width).  So a lane evaluated inside a
+wide shared bucket carries bit-for-bit the value it would have carried in
+the search's own small bucket; the only things coalescing changes are the
+padded width paid per real lane and WHEN the dispatch happens — and the
+pipelined-parity contract (DESIGN.md §7) already established that collect
+timing is invisible to the engine.
+
+The façade each search's grid holds (``lane_submitter(search_id)``) quacks
+exactly like an ``EvalBackend``'s submit/collect pair, so
+``BatchedVolunteerGrid`` needs no coalescing knowledge: its ``submitter``
+seam points here instead of at the backend, and everything else —
+pipelining, speculation, staging-ring clamps — behaves identically.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.substrates.eval_backend import (STAGING_RING, EvalBackend,
+                                                bucket_size)
+
+
+@dataclasses.dataclass
+class CoalesceStats:
+    """The speed story, measurable: ``dispatches`` vs ``lane_blocks`` is
+    the dispatch amortization (one device round-trip now serves that many
+    per-search blocks), ``padded_lanes`` vs ``solo_padded_lanes`` the
+    padding amortization (width actually paid vs what the same blocks
+    would have paid in their own buckets)."""
+    dispatches: int = 0               # real device buckets submitted
+    lane_blocks: int = 0              # per-search blocks folded into them
+    lanes: int = 0                    # real lanes across all dispatches
+    padded_lanes: int = 0             # padded width actually paid
+    solo_padded_lanes: int = 0        # width the same blocks would pay solo
+    forced_flushes: int = 0           # rounds dispatched early by a collect
+    ring_drains: int = 0              # old rounds materialized to free slots
+    bucket_hist: Dict[int, int] = dataclasses.field(default_factory=dict)
+
+
+class _Round:
+    """One shared bucket being assembled (``handle is None``) or in flight
+    (``handle`` set, ``ys`` cached after the first collect)."""
+    __slots__ = ("pts", "mal_u", "tags", "k", "handle", "ys")
+
+    def __init__(self):
+        self.pts: List[np.ndarray] = []
+        self.mal_u: List[np.ndarray] = []
+        self.tags: List[np.ndarray] = []
+        self.k = 0
+        self.handle = None
+        self.ys: Optional[np.ndarray] = None
+
+
+class LaneSlice:
+    """One search's contiguous lanes inside a shared coalesced bucket —
+    the multi-search counterpart of an ``EvalHandle``.  ``kp`` (the width
+    the lanes were actually evaluated at, what the grid's bucket histogram
+    records) resolves once the round has dispatched; collecting an
+    undispatched slice force-flushes its round first, so the value is
+    always available by the time a collector reads it."""
+    __slots__ = ("round_", "offset", "k", "tag")
+
+    def __init__(self, round_: _Round, offset: int, k: int, tag: int):
+        self.round_ = round_
+        self.offset = offset
+        self.k = k
+        self.tag = tag
+
+    @property
+    def kp(self) -> Optional[int]:
+        h = self.round_.handle
+        return None if h is None else h.kp
+
+
+class _TaggedSubmitter:
+    """Per-search façade bound to (coalescer, search id): the object a
+    search's ``BatchedVolunteerGrid`` uses as its ``submitter`` seam."""
+    __slots__ = ("_co", "tag")
+
+    def __init__(self, co: "CoalescingSubmitter", tag: int):
+        self._co = co
+        self.tag = tag
+
+    def submit(self, pts: np.ndarray,
+               mal_u: Optional[np.ndarray] = None) -> LaneSlice:
+        return self._co.submit(self.tag, pts, mal_u)
+
+    def collect(self, lane: LaneSlice) -> np.ndarray:
+        return self._co.collect(lane)
+
+
+class CoalescingSubmitter:
+    """Folds blocks from many searches into shared tagged buckets.
+
+    Protocol: searches ``submit`` into the open round at any time; the
+    scheduler calls ``flush()`` once per scheduling round (after stepping
+    every live search) to dispatch the shared bucket.  A ``collect`` on a
+    lane of the still-open round force-flushes it first — a search that
+    must decide a phase transition mid-round never waits on the others.
+    Rounds are created and flushed strictly in order, so at most one round
+    is ever open.
+    """
+
+    def __init__(self, backend: EvalBackend):
+        self.backend = backend
+        self._open: Optional[_Round] = None
+        # flushed rounds per bucket shape, submission order: K searches
+        # each pipelining a few lane handles can hold MORE uncollected
+        # same-shape buckets than one search ever could, so the coalescer
+        # — not the per-search depth clamp — must keep the staging ring
+        # safe (see flush()); the backend still raises if this ever slips
+        self._inflight: Dict[int, collections.deque] = {}
+        self.stats = CoalesceStats()
+
+    def lane_submitter(self, tag: int) -> _TaggedSubmitter:
+        """The submit/collect façade a search's grid plugs in as its
+        ``submitter``; ``tag`` is the search id stamped on its lanes."""
+        return _TaggedSubmitter(self, tag)
+
+    def submit(self, tag: int, pts: np.ndarray,
+               mal_u: Optional[np.ndarray] = None) -> LaneSlice:
+        r = self._open
+        if r is None:
+            r = self._open = _Round()
+        k = len(pts)
+        lane = LaneSlice(r, r.k, k, tag)
+        r.pts.append(np.asarray(pts))
+        r.mal_u.append(np.full(k, np.nan) if mal_u is None
+                       else np.asarray(mal_u))
+        r.tags.append(np.full(k, tag, np.int64))
+        r.k += k
+        self.stats.lane_blocks += 1
+        self.stats.lanes += k
+        self.stats.solo_padded_lanes += bucket_size(k,
+                                                    self.backend.min_bucket)
+        return lane
+
+    def flush(self) -> None:
+        """Dispatch the open round as ONE tagged backend bucket (no-op when
+        nothing was submitted since the last flush).
+
+        Ring safety: submitting the (STAGING_RING)-th uncollected bucket
+        of one shape would restage a buffer the device may still read, so
+        before dispatching, the oldest in-flight rounds of this shape are
+        materialized early (their values are CACHED on the round — later
+        lane collects slice the cache, so consumers never notice; collect
+        timing is invisible to the engines by the §7 contract)."""
+        r = self._open
+        if r is None:
+            return
+        self._open = None
+        kp = bucket_size(r.k, self.backend.min_bucket)
+        dq = self._inflight.setdefault(kp, collections.deque())
+        # the ring is POSITIONAL (slots rotate round-robin), so the real
+        # requirement is that everything older than the newest ring-2
+        # submissions of this shape is materialized — pop oldest-first,
+        # draining only rounds consumers haven't collected yet (a
+        # materialized mid-deque round holds no slot and is not pressure)
+        while len(dq) > STAGING_RING - 2:
+            old = dq.popleft()
+            if old.ys is None:
+                old.ys = self.backend.collect(old.handle)
+                self.stats.ring_drains += 1
+        pts = r.pts[0] if len(r.pts) == 1 else np.concatenate(r.pts)
+        mal_u = r.mal_u[0] if len(r.mal_u) == 1 else np.concatenate(r.mal_u)
+        tags = r.tags[0] if len(r.tags) == 1 else np.concatenate(r.tags)
+        r.handle = self.backend.submit(pts, mal_u, lane_tags=tags)
+        dq.append(r)
+        self.stats.dispatches += 1
+        self.stats.padded_lanes += r.handle.kp
+        self.stats.bucket_hist[r.handle.kp] = \
+            self.stats.bucket_hist.get(r.handle.kp, 0) + 1
+
+    def collect(self, lane: LaneSlice) -> np.ndarray:
+        """Materialize one search's lanes.  The shared bucket is collected
+        exactly once (first caller blocks, frees the staging slot, and
+        caches the values); later lane collects slice the cache."""
+        r = lane.round_
+        if r.handle is None:
+            if r is not self._open:
+                raise RuntimeError(
+                    "lane belongs to a round that was never dispatched")
+            # a mid-round phase decision: dispatch what we have now
+            self.stats.forced_flushes += 1
+            self.flush()
+        if r.ys is None:
+            r.ys = self.backend.collect(r.handle)
+        return r.ys[lane.offset:lane.offset + lane.k]

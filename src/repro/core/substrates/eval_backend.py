@@ -90,13 +90,19 @@ class EvalHandle(NamedTuple):
     ``kp`` the padded bucket width, ``slot`` the staging-ring slot the
     bucket aliases until collected, and ``seq`` the submission's ownership
     token for that slot (a stale or double ``collect`` must not free a
-    slot now owned by a newer submission).
+    slot now owned by a newer submission).  ``tags`` is the per-lane
+    submitter-id array shipped with a coalesced multi-search bucket
+    (DESIGN.md §8) — host-side framing metadata for observability and
+    debugging (which search owns each lane); never read by the device
+    computation, and not the demux mechanism either (consumers slice by
+    lane offsets).  ``None`` for single-submitter buckets.
     """
     ys: Any
     k: int
     kp: int
     slot: int
     seq: int
+    tags: Any = None
 
 
 class EvalBackend:
@@ -199,11 +205,18 @@ class EvalBackend:
     # -- the async protocol --------------------------------------------------
 
     def submit(self, pts: np.ndarray,
-               mal_u: Optional[np.ndarray] = None) -> EvalHandle:
+               mal_u: Optional[np.ndarray] = None,
+               lane_tags: Optional[np.ndarray] = None) -> EvalHandle:
         """Frame a (k, n) block into its bucket and dispatch the evaluation
         asynchronously.  ``mal_u``: per-lane malicious draw in [0.2, 0.8],
-        NaN for honest lanes (None == all honest).  Returns immediately;
-        pass the handle to ``collect`` for the values."""
+        NaN for honest lanes (None == all honest).  ``lane_tags``: optional
+        (k,) per-lane submitter ids for coalesced multi-search buckets —
+        carried on the handle so every in-flight bucket is attributable
+        lane by lane (observability/debugging; demux itself is positional,
+        by lane offset).  The device computation never sees them (lanes
+        are row-independent, which is exactly why coalescing is safe).
+        Returns immediately; pass the handle to ``collect`` for the
+        values."""
         k, n = pts.shape
         kp = bucket_size(k, self.min_bucket)
         buf, ubuf, slot = self._staging(kp, n)
@@ -219,7 +232,9 @@ class EvalBackend:
             ubuf[k:] = np.nan
         self._warmed.add((n, kp))    # a lazy compile still warms the cell
         return EvalHandle(self._eval(buf, ubuf, np.int32(k)), k, kp, slot,
-                          self._submit_seq)
+                          self._submit_seq,
+                          None if lane_tags is None
+                          else np.asarray(lane_tags))
 
     def collect(self, handle: EvalHandle) -> np.ndarray:
         """Materialize a submitted bucket (blocks until the device is

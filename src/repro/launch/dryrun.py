@@ -17,10 +17,17 @@ iterates across all three (DESIGN.md §6–§7) — so the production
 partitioning AND the async submit/collect path are exercised on CPU
 before any TPU time is spent.
 
+``--substrate multi_search`` runs the multi-search orchestrator smoke
+(DESIGN.md §8): a heterogeneous portfolio of concurrent ANM searches
+coalesced over ONE shared backend — in-process and shard_map'd over the
+production mesh — where every orchestrated search must commit
+bit-identical iterates to the same spec run alone on the same backend.
+
 Usage:
     python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k
     python -m repro.launch.dryrun --all [--mesh pod|multipod|both] [--skip-existing]
     python -m repro.launch.dryrun --substrate pod_mesh
+    python -m repro.launch.dryrun --substrate multi_search
 """
 import argparse
 import functools
@@ -287,6 +294,105 @@ def run_substrate_smoke(out_dir: str, m: int = 32, iterations: int = 2,
     return ok
 
 
+def run_multi_search_smoke(out_dir: str, n_searches: int = 4, m: int = 24,
+                           iterations: int = 2, n_stars: int = 400,
+                           fleet_hosts: int = 512) -> bool:
+    """Multi-search orchestrator smoke (``--substrate multi_search``).
+
+    A heterogeneous ``n_searches``-way portfolio (two different per-phase
+    ``m``'s, perturbed starts, per-slot sub-fleets) runs coalesced over
+    one shared backend, twice: through ``InProcessEvalBackend`` and
+    through ``PodMeshEvalBackend`` on the production (data=16, model=16)
+    mesh of forced host devices.  For EVERY search and BOTH backends, the
+    orchestrated engine must commit bit-identical iterates and identical
+    final stats to the same spec run alone on the same backend — the
+    coalescing-safety contract of DESIGN.md §8.  Writes
+    artifacts/dryrun/substrate_multi_search.json; returns pass/fail.
+    """
+    import numpy as np
+    from repro.core.anm import AnmConfig
+    from repro.core.engine import identical_trajectories
+    from repro.core.grid import GridConfig
+    from repro.core.orchestrator import (FleetScheduler, SearchDirector,
+                                         multi_start_specs)
+    from repro.core.substrates.eval_backend import InProcessEvalBackend
+    from repro.core.substrates.pod_mesh import PodMeshEvalBackend
+    from repro.data import sdss
+
+    mesh = make_production_mesh()
+    stripe = sdss.make_stripe("multisearch_smoke", n_stars=n_stars, seed=23)
+    f_batch, _ = sdss.make_fitness(stripe)
+    rng = np.random.default_rng(3)
+    x0 = np.clip(stripe.truth + rng.normal(0, 0.2, 8).astype(np.float32),
+                 sdss.LO, sdss.HI)
+    fleet = GridConfig(n_hosts=fleet_hosts, failure_prob=0.05,
+                       malicious_prob=0.01, seed=9)
+    configs = [AnmConfig(m_regression=m, m_line_search=m,
+                         max_iterations=iterations),
+               AnmConfig(m_regression=m // 2, m_line_search=m // 2,
+                         max_iterations=iterations)]
+
+    def run_portfolio(backend):
+        sched = FleetScheduler(backend, fleet)
+        specs = multi_start_specs(sched, x0, sdss.LO, sdss.HI,
+                                  sdss.DEFAULT_STEP, configs[0], n_searches,
+                                  seed=7, jitter=0.3, configs=configs)
+        t0 = time.time()
+        res = SearchDirector(sched, specs).run()
+        wall = time.time() - t0
+        parity = []
+        for o in res.outcomes:
+            solo = o.spec.solo_run(backend)
+            parity.append(identical_trajectories(o.engine, solo)
+                          and o.engine.stats == solo.stats)
+        return res, wall, parity
+
+    backends = {
+        "in_process": InProcessEvalBackend(f_batch),
+        "pod_mesh": PodMeshEvalBackend(f_batch, mesh=mesh),
+    }
+    report = {"mesh": "16x16", "n_searches": n_searches,
+              "fleet_hosts": fleet_hosts, "backends": {}}
+    ok = True
+    cross = {}
+    for name, backend in backends.items():
+        res, wall, parity = run_portfolio(backend)
+        co = res.coalesce_stats
+        report["backends"][name] = {
+            "parity_per_search": parity,
+            "iterations": [o.engine.iteration for o in res.outcomes],
+            "final": [o.engine.best_fitness for o in res.outcomes],
+            "rounds": res.rounds,
+            "dispatches": co.dispatches, "lane_blocks": co.lane_blocks,
+            "padded_lanes": co.padded_lanes,
+            "solo_padded_lanes": co.solo_padded_lanes,
+            "wall_s": round(wall, 3),
+        }
+        cross[name] = res
+        ok = ok and all(parity)
+    # row-independence also means the portfolio itself must agree across
+    # backends, search by search
+    backend_pair_ok = all(
+        identical_trajectories(a.engine, b.engine)
+        for a, b in zip(cross["in_process"].outcomes,
+                        cross["pod_mesh"].outcomes))
+    ok = ok and backend_pair_ok
+    report["cross_backend_ok"] = backend_pair_ok
+    report["parity_ok"] = ok
+    path = os.path.join(out_dir, "substrate_multi_search.json")
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2)
+    rb = report["backends"]
+    print(f"[{'ok' if ok else 'FAIL'}] substrate multi_search: "
+          f"{n_searches} searches, dispatches "
+          f"{rb['in_process']['dispatches']}/{rb['pod_mesh']['dispatches']} "
+          f"for {rb['in_process']['lane_blocks']} blocks, wall "
+          f"{rb['in_process']['wall_s']}s/{rb['pod_mesh']['wall_s']}s "
+          f"(in-process/pod), cross-backend "
+          f"{'ok' if backend_pair_ok else 'FAIL'} -> {path}")
+    return ok
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -312,7 +418,8 @@ def main():
     ap.add_argument("--quant-cache", action="store_true",
                     help="int8 KV/latent cache (perf variant)")
     ap.add_argument("--suffix", default="", help="artifact filename suffix")
-    ap.add_argument("--substrate", default=None, choices=["pod_mesh"],
+    ap.add_argument("--substrate", default=None,
+                    choices=["pod_mesh", "multi_search"],
                     help="run the substrate smoke instead of model cells")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
@@ -322,6 +429,8 @@ def main():
 
     if args.substrate == "pod_mesh":
         raise SystemExit(0 if run_substrate_smoke(out_dir) else 1)
+    if args.substrate == "multi_search":
+        raise SystemExit(0 if run_multi_search_smoke(out_dir) else 1)
     meshes = {"pod": [False], "multipod": [True], "both": [False, True]}[args.mesh]
 
     archs = ARCH_NAMES if (args.all or args.arch is None) else [args.arch]

@@ -12,3 +12,7 @@ jax.config.update("jax_enable_x64", False)
 def pytest_configure(config):
     config.addinivalue_line(
         "markers", "slow: long-running end-to-end tests (subprocess smokes)")
+    config.addinivalue_line(
+        "markers", "orchestrator: tier-1 multi-search orchestrator tests "
+                   "(run in CI's cached-venv tier-1 job; select with "
+                   "-m orchestrator)")

@@ -199,6 +199,65 @@ def test_phase_flip_discards_speculative_block():
     np.testing.assert_array_equal(ba[3], bb[3])      # alphas
 
 
+def test_peek_cancel_while_validation_pending_rewinds_ticket_state():
+    """A peek taken while quorum replicas are pending generates nothing
+    (blocks only exist in regression/line-search), but the cancel must
+    rewind the validation ticket state too — the snapshot carries
+    ``validations_issued`` and the pending-replica budget, so a substrate
+    interleaving many engines can peek anywhere without corrupting a
+    pending quorum."""
+    f = lambda p: float(np.sum(np.asarray(p) ** 2))
+    spec, plain = _engine_pair()
+    first = {}
+    for e in (spec, plain):
+        reqs = e.generate()                    # the f(x0) bootstrap probe
+        e.assimilate([EvalResult(r, f(r.point)) for r in reqs])
+        assert e.validating and e.validation_pending == e.quorum
+        # hand out ONE replica: validation tickets are now mid-stream
+        [r1] = e.generate(1)
+        assert r1.validates is not None and e.validation_pending == e.quorum - 1
+        first[e] = r1
+    # the speculating engine peeks mid-validation...
+    assert spec.peek_block(5) is None
+    spec.cancel_block()
+    # ...and must be indistinguishable from the twin that never did
+    assert spec.validation_pending == plain.validation_pending
+    assert spec.stats == plain.stats
+    assert spec._next_ticket == plain._next_ticket
+    # the remaining replica and the rest of the validation line up exactly
+    [ra], [rb] = spec.generate(), plain.generate()
+    assert ra.ticket == rb.ticket and ra.validates == rb.validates
+    for e, r in ((spec, ra), (plain, rb)):
+        e.assimilate([EvalResult(q, f(q.point)) for q in (first[e], r)])
+    assert spec.phase == plain.phase == "regression"
+    assert spec.stats == plain.stats
+
+
+def test_peek_cancel_during_linesearch_validation_keeps_quorum_exact():
+    """Same contract deeper in the run: drive a full regression + line
+    search to the candidate-validation phase, peek/cancel there, and
+    check the twin still validates and commits identically."""
+    f = lambda p: float(np.sum(np.asarray(p) ** 2))
+    spec, plain = _engine_pair(m=12)
+    for e in (spec, plain):
+        _skip_bootstrap(e, f)
+        while not e.validating:                # regression + line search
+            reqs = e.generate()
+            e.assimilate([EvalResult(r, f(r.point)) for r in reqs])
+        assert e.validation_pending == e.quorum
+    assert spec.peek_block() is None
+    spec.cancel_block()
+    assert spec.validation_pending == plain.validation_pending
+    assert spec.stats == plain.stats
+    for e in (spec, plain):                    # finish the validation
+        reqs = e.generate()
+        e.assimilate([EvalResult(r, f(r.point)) for r in reqs])
+    assert spec.phase == plain.phase
+    assert spec.iteration == plain.iteration
+    assert spec.best_fitness == plain.best_fitness
+    assert spec.stats == plain.stats
+
+
 # -- on-device corruption and masking -----------------------------------------
 
 def test_submit_applies_corruption_lanes_on_device():
