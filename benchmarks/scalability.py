@@ -30,6 +30,21 @@ grid substrates driving the same ``AnmEngine`` workload:
     its serial twin, and the coalesced portfolio beats the serial runs by
     ≥1.5× wall-clock at the full workload (≥1.1× in smoke).
 
+  * NEW (DESIGN.md §9): the SERVER-OVERHEAD row — the same seeded search
+    served through the fault-tolerant loopback work server (real framed
+    protocol messages, host registry, leases, replay log + snapshots,
+    batched lazy evaluation in the simulated client pool) at the
+    1024-host smoke workload.  Gates: two server runs commit
+    bit-identical trajectories, and the server's wall-clock stays within
+    1.5× of the per-event FGDO simulation of the SAME workload — the
+    in-process adapter the service layer replaces.  The ratio against
+    the direct batched grid is reported UNGATED: a warmed batched grid
+    finishes this workload in tens of milliseconds, while any real
+    per-host work server must handle ~10⁴ protocol messages (1024
+    registrations plus the no-work backoff waves alone exceed that
+    budget), so a wall-clock gate against it would measure message count,
+    not server quality.
+
 Every row lands in artifacts/benchmarks/scalability.json AND in the
 repo-root ``BENCH_scalability.json`` (wall-clock rows + speedups + the
 recording platform's metadata — python/jax/numpy versions, cpu count,
@@ -70,6 +85,8 @@ POD_M_SCALE = 8                       # pod-mesh row runs at 8x the batched m
 PIPE_REPS = 7                         # alternating timing reps (best-of gates)
 MS_SEARCHES = 8                       # multi-search shootout portfolio size
 MS_REPS = 5                           # its alternating timing reps
+SRV_REPS = 3                          # server-overhead alternating reps
+SRV_MAX_OVERHEAD = 1.5                # vs the per-event FGDO baseline
 
 
 def _platform_meta():
@@ -358,13 +375,145 @@ def _multi_search_shootout(n_searches: int, n_hosts: int, m: int,
             wall_ser / max(wall_co, 1e-9), parity_ok)
 
 
-def run(out_dir=None, n_stars=8_000, smoke: bool = False):
+def _server_shootout(n_hosts: int, n_stars: int, m: int, iters: int):
+    """Loopback work server vs the two in-process drivers of the SAME
+    seeded workload (DESIGN.md §9).  Three runs share one warmed backend:
+
+      * per-event ``VolunteerGrid`` over the (throttled) ``FgdoAnmServer``
+        adapter — the in-process baseline the service layer replaces and
+        the denominator of the GATED overhead ratio;
+      * direct ``BatchedVolunteerGrid`` — reported ratio only (see the
+        module docstring for why a gate against it would be meaningless);
+      * ``ServerSubstrate`` over the loopback transport with
+        checkpointing ON (replay log + snapshots to a temp dir) — the
+        realistic fault-tolerant configuration, not a stripped-down one.
+
+    Wall-clock is best-of ``SRV_REPS`` alternating repetitions; the two
+    timed server runs double as the determinism gate (bit-identical
+    trajectories + identical engine stats).  Returns
+    (event_row, batched_row, server_row, overhead_vs_event,
+    ratio_vs_batched, determinism_ok)."""
+    import shutil
+    import tempfile
+
+    from repro.core.orchestrator.director import SearchSpec
+    from repro.server.sim import ServerSubstrate
+
+    stripe = sdss.make_stripe("server_row", n_stars=n_stars, seed=29)
+    f_batch, f_single = sdss.make_fitness(stripe)
+    fnp = lambda p: float(f_single(jnp.asarray(p, jnp.float32)))
+    rng = np.random.default_rng(3)
+    x0 = np.clip(stripe.truth + rng.normal(0, 0.2, 8).astype(np.float32),
+                 sdss.LO, sdss.HI)
+    anm_cfg = AnmConfig(m_regression=m, m_line_search=m,
+                        max_iterations=iters)
+    grid_cfg = GridConfig(n_hosts=n_hosts, failure_prob=0.05,
+                          malicious_prob=0.01, seed=9)
+    backend = InProcessEvalBackend(f_batch, n_dims=8,
+                                   max_bucket=bucket_size(n_hosts))
+    spec = SearchSpec(
+        name="server_row", x0=np.asarray(x0, np.float64),
+        lo=np.asarray(sdss.LO, np.float64),
+        hi=np.asarray(sdss.HI, np.float64),
+        step=np.asarray(sdss.DEFAULT_STEP, np.float64),
+        anm=anm_cfg, grid=grid_cfg, engine_seed=7)
+
+    def run_event():
+        # the same feeder throttle as the work server, so the baseline is
+        # the adapter as the service layer actually drives it
+        server = FgdoAnmServer(x0, sdss.LO, sdss.HI, sdss.DEFAULT_STEP,
+                               anm_cfg, seed=7, overcommit=2.0)
+        t0 = time.perf_counter()
+        VolunteerGrid(fnp, grid_cfg).run(server)
+        return server, time.perf_counter() - t0
+
+    def run_batched():
+        engine = AnmEngine(x0, sdss.LO, sdss.HI, sdss.DEFAULT_STEP,
+                           anm_cfg, seed=7)
+        t0 = time.perf_counter()
+        BatchedVolunteerGrid(None, grid_cfg, backend=backend,
+                             pipelined=False).run(engine)
+        return engine, time.perf_counter() - t0
+
+    def run_server():
+        d = tempfile.mkdtemp(prefix="bench_server_")
+        try:
+            sub = ServerSubstrate(spec, grid_cfg, backend,
+                                  ckpt_dir=d, snapshot_every=2000,
+                                  warm=False)
+            t0 = time.perf_counter()
+            res = sub.run()
+            return res, time.perf_counter() - t0
+        finally:
+            shutil.rmtree(d, ignore_errors=True)
+
+    run_server(), run_event(), run_batched()   # warm every shared jit
+    t_ev, t_bt, t_srv, results = [], [], [], []
+    for _ in range(SRV_REPS):                  # alternate: noise hits all
+        _, t = run_event()
+        t_ev.append(t)
+        _, t = run_batched()
+        t_bt.append(t)
+        res, t = run_server()
+        t_srv.append(t)
+        results.append(res)
+    determinism_ok = all(
+        identical_trajectories(results[0].engines[0], r.engines[0])
+        and results[0].engines[0].stats == r.engines[0].stats
+        for r in results[1:])
+    wall_ev, wall_bt, wall_srv = min(t_ev), min(t_bt), min(t_srv)
+    res = results[-1]
+    eng = res.engines[0]
+    import dataclasses as _dc
+    server_row = {
+        "substrate": "loopback_server", "n_hosts": n_hosts, "m": m,
+        "wall_s": wall_srv, "wall_s_reps": [round(t, 4) for t in t_srv],
+        "per_event_wall_s": wall_ev, "batched_wall_s": wall_bt,
+        "final": eng.best_fitness, "iterations": eng.iteration,
+        "messages": res.pool.messages,
+        "work_granted": res.pool.work_received,
+        "results_reported": res.pool.results_reported,
+        "eval_batches": res.pool.eval_batches,
+        "evals": res.pool.evals,
+        "counters": _dc.asdict(res.server.counters),
+        "registry": res.server.registry.summary(),
+        "determinism_ok": determinism_ok,
+    }
+    event_row = {"substrate": "per_event_throttled", "n_hosts": n_hosts,
+                 "m": m, "wall_s": wall_ev,
+                 "wall_s_reps": [round(t, 4) for t in t_ev]}
+    batched_row = {"substrate": "batched_for_server_row",
+                   "n_hosts": n_hosts, "m": m, "wall_s": wall_bt,
+                   "wall_s_reps": [round(t, 4) for t in t_bt]}
+    return (event_row, batched_row, server_row,
+            wall_srv / max(wall_ev, 1e-9),
+            wall_srv / max(wall_bt, 1e-9), determinism_ok)
+
+
+def run(out_dir=None, n_stars=8_000, smoke: bool = False,
+        substrate: str = "all"):
+    """``substrate`` filters which shootout sections run — names validated
+    against the SAME registry dict as ``repro.launch.dryrun --substrate``
+    (``repro/launch/substrates.py``): ``pod_mesh`` → the substrate
+    shootout, ``multi_search`` → the orchestrator shootout, ``server`` →
+    the server-overhead row; ``all`` (default, what CI runs) runs every
+    section and is the only mode that refreshes the perf ledger."""
+    from repro.launch.substrates import SUBSTRATES
+
+    if substrate != "all" and substrate not in SUBSTRATES:
+        raise ValueError(f"unknown substrate {substrate!r}: expected 'all' "
+                         f"or one of {sorted(SUBSTRATES)}")
+
+    def section(name: str) -> bool:
+        return substrate in ("all", name)
+
     out_dir = out_dir or os.path.abspath(OUT)
     os.makedirs(out_dir, exist_ok=True)
     results = {"hosts_sweep": [], "fault_sweep": [], "substrate_shootout": {},
-               "pipelined_shootout": {}, "multi_search_shootout": {}}
+               "pipelined_shootout": {}, "multi_search_shootout": {},
+               "server_shootout": {}}
 
-    if not smoke:
+    if not smoke and substrate == "all":
         stripe = sdss.make_stripe("scal", n_stars=n_stars, seed=21)
         _, f_single = sdss.make_fitness(stripe)
         fnp = lambda p: float(f_single(jnp.asarray(p, jnp.float32)))
@@ -405,80 +554,112 @@ def run(out_dir=None, n_stars=8_000, smoke: bool = False):
                  f"val_rejects={server.stats.validations_failed}")
 
     # -- substrate shootout: per-event vs batched vs pod-mesh-batched --------
-    if smoke:
-        n_hosts, ss_stars, m, iters = 1024, 2_000, 64, 1
-    else:
-        n_hosts, ss_stars, m, iters = 4096, 2_000, 64, 2
-    ev, bt, pod, speedup, pod_parity_ok, pod_overhead, pod_econ = \
-        _substrate_shootout(n_hosts, ss_stars, m, iters)
-    results["substrate_shootout"] = {
-        "n_hosts": n_hosts, "per_event": ev, "batched": bt,
-        "pod_mesh_batched": pod, "speedup": speedup,
-        "pod_sharding_overhead": pod_overhead,
-        "pod_vs_batched_m_wall_ratio": pod_econ}
-    emit(f"scal_substrate_event_{n_hosts}", ev["wall_s"] * 1e6,
-         f"final={ev['final']:.5f};completed={ev['completed']}")
-    emit(f"scal_substrate_batched_{n_hosts}", bt["wall_s"] * 1e6,
-         f"final={bt['final']:.5f};completed={bt['completed']};"
-         f"mean_batch={bt['mean_batch']:.0f}")
-    emit(f"scal_substrate_podmesh_{n_hosts}", pod["wall_s"] * 1e6,
-         f"m={pod['m']};final={pod['final']:.5f};"
-         f"shards={pod['data_shards']};mean_batch={pod['mean_batch']:.0f};"
-         f"parity={'ok' if pod_parity_ok else 'FAIL'}")
-    emit(f"scal_substrate_speedup_{n_hosts}", speedup,
-         f"target>=5x;event_s={ev['wall_s']:.1f};batched_s={bt['wall_s']:.2f}")
-    emit(f"scal_substrate_pod_overhead_{n_hosts}", pod_overhead,
-         f"target<=2x_vs_in_process_at_{POD_M_SCALE}x_m;"
-         f"pod_s={pod['wall_s']:.2f};ref_s={pod['in_process_at_8m_wall_s']:.2f}")
-    emit(f"scal_substrate_pod_econ_{n_hosts}", pod_econ,
-         f"info_{POD_M_SCALE}x_m_vs_batched_m;pod_s={pod['wall_s']:.2f};"
-         f"batched_s={bt['wall_s']:.2f}")
+    if section("pod_mesh"):
+        if smoke:
+            n_hosts, ss_stars, m, iters = 1024, 2_000, 64, 1
+        else:
+            n_hosts, ss_stars, m, iters = 4096, 2_000, 64, 2
+        ev, bt, pod, speedup, pod_parity_ok, pod_overhead, pod_econ = \
+            _substrate_shootout(n_hosts, ss_stars, m, iters)
+        results["substrate_shootout"] = {
+            "n_hosts": n_hosts, "per_event": ev, "batched": bt,
+            "pod_mesh_batched": pod, "speedup": speedup,
+            "pod_sharding_overhead": pod_overhead,
+            "pod_vs_batched_m_wall_ratio": pod_econ}
+        emit(f"scal_substrate_event_{n_hosts}", ev["wall_s"] * 1e6,
+             f"final={ev['final']:.5f};completed={ev['completed']}")
+        emit(f"scal_substrate_batched_{n_hosts}", bt["wall_s"] * 1e6,
+             f"final={bt['final']:.5f};completed={bt['completed']};"
+             f"mean_batch={bt['mean_batch']:.0f}")
+        emit(f"scal_substrate_podmesh_{n_hosts}", pod["wall_s"] * 1e6,
+             f"m={pod['m']};final={pod['final']:.5f};"
+             f"shards={pod['data_shards']};mean_batch={pod['mean_batch']:.0f};"
+             f"parity={'ok' if pod_parity_ok else 'FAIL'}")
+        emit(f"scal_substrate_speedup_{n_hosts}", speedup,
+             f"target>=5x;event_s={ev['wall_s']:.1f};"
+             f"batched_s={bt['wall_s']:.2f}")
+        emit(f"scal_substrate_pod_overhead_{n_hosts}", pod_overhead,
+             f"target<=2x_vs_in_process_at_{POD_M_SCALE}x_m;"
+             f"pod_s={pod['wall_s']:.2f};"
+             f"ref_s={pod['in_process_at_8m_wall_s']:.2f}")
+        emit(f"scal_substrate_pod_econ_{n_hosts}", pod_econ,
+             f"info_{POD_M_SCALE}x_m_vs_batched_m;pod_s={pod['wall_s']:.2f};"
+             f"batched_s={bt['wall_s']:.2f}")
 
     # -- pipelined vs sync tick loop (DESIGN.md §7) --------------------------
-    if smoke:
-        p_hosts, p_m, p_tick, p_iters, min_pipe = 1024, 256, 8, 1, 1.1
-    else:
-        p_hosts, p_m, p_tick, p_iters, min_pipe = 4096, 512, 8, 3, 1.3
-    # (tick_batch of 8 on purpose: narrow ticks make the per-tick device
-    # round-trip the sync loop's bottleneck — the regime pipelining exists
-    # for; the wide-tick regime is covered by the batched row above)
-    sync_row, pipe_row, pipe_speedup, pipe_parity_ok = \
-        _pipelined_shootout(p_hosts, p_m, p_tick, p_iters)
-    results["pipelined_shootout"] = {
-        "n_hosts": p_hosts, "sync": sync_row, "pipelined": pipe_row,
-        "speedup": pipe_speedup}
-    emit(f"scal_pipelined_sync_{p_hosts}", sync_row["wall_s"] * 1e6,
-         f"m={p_m};tick={p_tick};dev_blk_s={sync_row['device_blocked_s']};"
-         f"ticks={sync_row['ticks']}")
-    emit(f"scal_pipelined_{p_hosts}", pipe_row["wall_s"] * 1e6,
-         f"m={p_m};tick={p_tick};dev_blk_s={pipe_row['device_blocked_s']};"
-         f"spec={pipe_row['spec_blocks']};depth={pipe_row['max_in_flight']};"
-         f"parity={'ok' if pipe_parity_ok else 'FAIL'}")
-    emit(f"scal_pipelined_speedup_{p_hosts}", pipe_speedup,
-         f"target>={min_pipe}x;sync_s={sync_row['wall_s']:.3f};"
-         f"pipe_s={pipe_row['wall_s']:.3f}")
+    if substrate == "all":
+        if smoke:
+            p_hosts, p_m, p_tick, p_iters, min_pipe = 1024, 256, 8, 1, 1.1
+        else:
+            p_hosts, p_m, p_tick, p_iters, min_pipe = 4096, 512, 8, 3, 1.3
+        # (tick_batch of 8 on purpose: narrow ticks make the per-tick device
+        # round-trip the sync loop's bottleneck — the regime pipelining
+        # exists for; the wide-tick regime is covered by the batched row)
+        sync_row, pipe_row, pipe_speedup, pipe_parity_ok = \
+            _pipelined_shootout(p_hosts, p_m, p_tick, p_iters)
+        results["pipelined_shootout"] = {
+            "n_hosts": p_hosts, "sync": sync_row, "pipelined": pipe_row,
+            "speedup": pipe_speedup}
+        emit(f"scal_pipelined_sync_{p_hosts}", sync_row["wall_s"] * 1e6,
+             f"m={p_m};tick={p_tick};"
+             f"dev_blk_s={sync_row['device_blocked_s']};"
+             f"ticks={sync_row['ticks']}")
+        emit(f"scal_pipelined_{p_hosts}", pipe_row["wall_s"] * 1e6,
+             f"m={p_m};tick={p_tick};dev_blk_s={pipe_row['device_blocked_s']};"
+             f"spec={pipe_row['spec_blocks']};"
+             f"depth={pipe_row['max_in_flight']};"
+             f"parity={'ok' if pipe_parity_ok else 'FAIL'}")
+        emit(f"scal_pipelined_speedup_{p_hosts}", pipe_speedup,
+             f"target>={min_pipe}x;sync_s={sync_row['wall_s']:.3f};"
+             f"pipe_s={pipe_row['wall_s']:.3f}")
 
     # -- multi-search orchestrator: coalesced vs serial (DESIGN.md §8) -------
-    if smoke:
-        ms_hosts, ms_m, ms_tick, ms_iters, min_ms = 512, 128, 8, 1, 1.1
-    else:
-        ms_hosts, ms_m, ms_tick, ms_iters, min_ms = 512, 256, 8, 2, 1.5
-    ser_row, co_row, ms_speedup, ms_parity_ok = \
-        _multi_search_shootout(MS_SEARCHES, ms_hosts, ms_m, ms_tick,
-                               ms_iters)
-    results["multi_search_shootout"] = {
-        "n_searches": MS_SEARCHES, "fleet_hosts": ms_hosts,
-        "serial": ser_row, "coalesced": co_row, "speedup": ms_speedup}
-    emit(f"scal_multisearch_serial_{MS_SEARCHES}x", ser_row["wall_s"] * 1e6,
-         f"m={ms_m};tick={ms_tick};iters={ms_iters}")
-    emit(f"scal_multisearch_coalesced_{MS_SEARCHES}x",
-         co_row["wall_s"] * 1e6,
-         f"m={ms_m};tick={ms_tick};dispatches={co_row['dispatches']};"
-         f"blocks_per_dispatch={co_row['blocks_per_dispatch']:.1f};"
-         f"parity={'ok' if ms_parity_ok else 'FAIL'}")
-    emit(f"scal_multisearch_speedup_{MS_SEARCHES}x", ms_speedup,
-         f"target>={min_ms}x;serial_s={ser_row['wall_s']:.3f};"
-         f"coalesced_s={co_row['wall_s']:.3f}")
+    if section("multi_search"):
+        if smoke:
+            ms_hosts, ms_m, ms_tick, ms_iters, min_ms = 512, 128, 8, 1, 1.1
+        else:
+            ms_hosts, ms_m, ms_tick, ms_iters, min_ms = 512, 256, 8, 2, 1.5
+        ser_row, co_row, ms_speedup, ms_parity_ok = \
+            _multi_search_shootout(MS_SEARCHES, ms_hosts, ms_m, ms_tick,
+                                   ms_iters)
+        results["multi_search_shootout"] = {
+            "n_searches": MS_SEARCHES, "fleet_hosts": ms_hosts,
+            "serial": ser_row, "coalesced": co_row, "speedup": ms_speedup}
+        emit(f"scal_multisearch_serial_{MS_SEARCHES}x",
+             ser_row["wall_s"] * 1e6,
+             f"m={ms_m};tick={ms_tick};iters={ms_iters}")
+        emit(f"scal_multisearch_coalesced_{MS_SEARCHES}x",
+             co_row["wall_s"] * 1e6,
+             f"m={ms_m};tick={ms_tick};dispatches={co_row['dispatches']};"
+             f"blocks_per_dispatch={co_row['blocks_per_dispatch']:.1f};"
+             f"parity={'ok' if ms_parity_ok else 'FAIL'}")
+        emit(f"scal_multisearch_speedup_{MS_SEARCHES}x", ms_speedup,
+             f"target>={min_ms}x;serial_s={ser_row['wall_s']:.3f};"
+             f"coalesced_s={co_row['wall_s']:.3f}")
+
+    # -- server-overhead row: loopback work server (DESIGN.md §9) ------------
+    if section("server"):
+        # the row is DEFINED at the 1024-host smoke-shootout workload in
+        # both modes: its story is protocol/service overhead, which does
+        # not need the full-mode fleet to show
+        sv_hosts, sv_stars, sv_m, sv_iters = 1024, 2_000, 64, 1
+        sv_ev, sv_bt, srv_row, srv_overhead, srv_vs_batched, srv_det_ok = \
+            _server_shootout(sv_hosts, sv_stars, sv_m, sv_iters)
+        results["server_shootout"] = {
+            "n_hosts": sv_hosts, "per_event": sv_ev, "batched": sv_bt,
+            "server": srv_row, "overhead_vs_per_event": srv_overhead,
+            "server_vs_batched_wall_ratio": srv_vs_batched}
+        emit(f"scal_server_loopback_{sv_hosts}", srv_row["wall_s"] * 1e6,
+             f"m={sv_m};messages={srv_row['messages']};"
+             f"evals={srv_row['evals']};batches={srv_row['eval_batches']};"
+             f"determinism={'ok' if srv_det_ok else 'FAIL'}")
+        emit(f"scal_server_overhead_{sv_hosts}", srv_overhead,
+             f"target<={SRV_MAX_OVERHEAD}x_vs_per_event;"
+             f"server_s={srv_row['wall_s']:.3f};"
+             f"event_s={sv_ev['wall_s']:.3f}")
+        emit(f"scal_server_vs_batched_{sv_hosts}", srv_vs_batched,
+             f"info_only;server_s={srv_row['wall_s']:.3f};"
+             f"batched_s={sv_bt['wall_s']:.3f}")
 
     with open(os.path.join(out_dir, "scalability.json"), "w") as f:
         json.dump(results, f, indent=2)
@@ -487,74 +668,105 @@ def run(out_dir=None, n_stars=8_000, smoke: bool = False):
     # full runs land under SEPARATE keys (their workloads are not
     # comparable), merged into whatever the other mode last recorded so a
     # smoke run never erases the full-run trajectory.
-    bench_path = os.path.abspath(BENCH_JSON)
-    try:
-        with open(bench_path) as f:
-            ledger = json.load(f)
-    except (OSError, ValueError):
-        ledger = {}
-    ledger["smoke" if smoke else "full"] = {
-        "rows": [ev, bt, pod, sync_row, pipe_row, ser_row, co_row],
-        "speedups": {
-            "batched_vs_per_event": speedup,
-            "pod_sharding_overhead": pod_overhead,
-            "pod_vs_batched_m_wall_ratio": pod_econ,
-            "pipelined_vs_sync": pipe_speedup,
-            "multi_search_coalesced_vs_serial": ms_speedup,
-        },
-        "parity": {"pod_mesh": pod_parity_ok, "pipelined": pipe_parity_ok,
-                   "multi_search": ms_parity_ok},
-        "platform": _platform_meta(),
-    }
-    with open(bench_path, "w") as f:
-        json.dump(ledger, f, indent=2)
+    if substrate == "all":
+        bench_path = os.path.abspath(BENCH_JSON)
+        try:
+            with open(bench_path) as f:
+                ledger = json.load(f)
+        except (OSError, ValueError):
+            ledger = {}
+        ledger["smoke" if smoke else "full"] = {
+            "rows": [ev, bt, pod, sync_row, pipe_row, ser_row, co_row,
+                     srv_row],
+            "speedups": {
+                "batched_vs_per_event": speedup,
+                "pod_sharding_overhead": pod_overhead,
+                "pod_vs_batched_m_wall_ratio": pod_econ,
+                "pipelined_vs_sync": pipe_speedup,
+                "multi_search_coalesced_vs_serial": ms_speedup,
+                "server_overhead_vs_per_event": srv_overhead,
+                "server_vs_batched_wall_ratio": srv_vs_batched,
+            },
+            "parity": {"pod_mesh": pod_parity_ok,
+                       "pipelined": pipe_parity_ok,
+                       "multi_search": ms_parity_ok,
+                       "server_determinism": srv_det_ok},
+            "platform": _platform_meta(),
+        }
+        with open(bench_path, "w") as f:
+            json.dump(ledger, f, indent=2)
     # the canaries must be able to FAIL: gate speedup, parity (pod-mesh AND
     # pipelined) and the overhead ceilings so the CI smoke job goes red when
     # a substrate regresses (lower speedup bars in smoke — shared CI runners
     # are noisy; the full acceptance targets are 5x and 1.3x)
-    if not pod_parity_ok:
-        raise RuntimeError(
-            "pod-mesh backend diverged from the in-process backend at the "
-            "same seed — committed iterates must be bit-identical")
-    if not pipe_parity_ok:
-        raise RuntimeError(
-            "pipelined tick loop diverged from the synchronous loop at the "
-            "same seed — committed iterates must be bit-identical")
-    min_speedup = 3.0 if smoke else 5.0
-    if speedup < min_speedup:
-        raise RuntimeError(
-            f"batched-grid speedup {speedup:.2f}x below the "
-            f"{min_speedup:.0f}x floor (event {ev['wall_s']:.2f}s vs "
-            f"batched {bt['wall_s']:.2f}s at {n_hosts} hosts)")
-    if pod_overhead > 2.0:
-        raise RuntimeError(
-            f"pod-mesh backend at {POD_M_SCALE}x m took {pod_overhead:.2f}x "
-            f"the in-process backend on the same workload (pod "
-            f"{pod['wall_s']:.2f}s vs {pod['in_process_at_8m_wall_s']:.2f}s) "
-            f"— sharding overhead above the 2x ceiling")
-    if pipe_speedup < min_pipe:
-        raise RuntimeError(
-            f"pipelined tick loop {pipe_speedup:.2f}x below the "
-            f"{min_pipe}x floor (sync {sync_row['wall_s']:.3f}s vs "
-            f"pipelined {pipe_row['wall_s']:.3f}s at {p_hosts} hosts)")
-    if not ms_parity_ok:
-        raise RuntimeError(
-            "a coalesced multi-search engine diverged from its serial twin "
-            "at the same seed — committed iterates must be bit-identical")
-    if ms_speedup < min_ms:
-        raise RuntimeError(
-            f"coalesced {MS_SEARCHES}-search portfolio {ms_speedup:.2f}x "
-            f"below the {min_ms}x floor (serial {ser_row['wall_s']:.3f}s "
-            f"vs coalesced {co_row['wall_s']:.3f}s)")
+    if section("pod_mesh"):
+        if not pod_parity_ok:
+            raise RuntimeError(
+                "pod-mesh backend diverged from the in-process backend at "
+                "the same seed — committed iterates must be bit-identical")
+        min_speedup = 3.0 if smoke else 5.0
+        if speedup < min_speedup:
+            raise RuntimeError(
+                f"batched-grid speedup {speedup:.2f}x below the "
+                f"{min_speedup:.0f}x floor (event {ev['wall_s']:.2f}s vs "
+                f"batched {bt['wall_s']:.2f}s at {n_hosts} hosts)")
+        if pod_overhead > 2.0:
+            raise RuntimeError(
+                f"pod-mesh backend at {POD_M_SCALE}x m took "
+                f"{pod_overhead:.2f}x the in-process backend on the same "
+                f"workload (pod {pod['wall_s']:.2f}s vs "
+                f"{pod['in_process_at_8m_wall_s']:.2f}s) — sharding "
+                f"overhead above the 2x ceiling")
+    if substrate == "all":
+        if not pipe_parity_ok:
+            raise RuntimeError(
+                "pipelined tick loop diverged from the synchronous loop at "
+                "the same seed — committed iterates must be bit-identical")
+        if pipe_speedup < min_pipe:
+            raise RuntimeError(
+                f"pipelined tick loop {pipe_speedup:.2f}x below the "
+                f"{min_pipe}x floor (sync {sync_row['wall_s']:.3f}s vs "
+                f"pipelined {pipe_row['wall_s']:.3f}s at {p_hosts} hosts)")
+    if section("multi_search"):
+        if not ms_parity_ok:
+            raise RuntimeError(
+                "a coalesced multi-search engine diverged from its serial "
+                "twin at the same seed — committed iterates must be "
+                "bit-identical")
+        if ms_speedup < min_ms:
+            raise RuntimeError(
+                f"coalesced {MS_SEARCHES}-search portfolio "
+                f"{ms_speedup:.2f}x below the {min_ms}x floor (serial "
+                f"{ser_row['wall_s']:.3f}s vs coalesced "
+                f"{co_row['wall_s']:.3f}s)")
+    if section("server"):
+        if not srv_det_ok:
+            raise RuntimeError(
+                "two loopback server runs of the same spec diverged — the "
+                "service layer must be deterministic at a given seed")
+        if srv_overhead > SRV_MAX_OVERHEAD:
+            raise RuntimeError(
+                f"loopback work server took {srv_overhead:.2f}x the "
+                f"per-event FGDO simulation of the same workload (server "
+                f"{srv_row['wall_s']:.3f}s vs event "
+                f"{sv_ev['wall_s']:.3f}s) — service overhead above the "
+                f"{SRV_MAX_OVERHEAD}x ceiling")
     return results
 
 
 def main():
+    from repro.launch.substrates import SUBSTRATES
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized substrate shootout only")
+    # the same registry dict repro.launch.dryrun derives its choices from
+    ap.add_argument("--substrate", default="all",
+                    choices=["all"] + sorted(SUBSTRATES),
+                    help="run only the named substrate's shootout section "
+                         "('all' runs everything and refreshes the ledger)")
     args = ap.parse_args()
-    run(smoke=args.smoke)
+    run(smoke=args.smoke, substrate=args.substrate)
 
 
 if __name__ == "__main__":

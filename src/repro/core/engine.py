@@ -368,6 +368,122 @@ class AnmEngine:
         self._pending_validation = val_pending
         self._spec_snapshot = None
 
+    # -- state serialization (service layer, DESIGN.md §9) ------------------
+
+    def state_dict(self) -> dict:
+        """The COMPLETE restartable engine state as plain python + numpy:
+        an engine built from the same constructor arguments and fed this
+        dict through ``load_state`` continues the search bit-identically —
+        same rng stream, ticket numbering, phase bookkeeping, candidate
+        ranking and stats.  This is the serialization seam the
+        crash-recoverable work server (``repro/server``) checkpoints
+        through; keep every mutable field here or a restore silently
+        diverges.  Numpy arrays stay arrays — the checkpoint layer owns
+        the JSON encoding (``repro.server.checkpoint.to_jsonable``)."""
+        cand = None
+        if self._candidates is not None:
+            cand = [np.asarray(a).copy() for a in self._candidates]
+        spec = None
+        if self._spec_snapshot is not None:
+            st, ticket, issued, val_issued, val_pending = self._spec_snapshot
+            spec = {"rng_state": st, "ticket": ticket, "issued": issued,
+                    "validations_issued": val_issued,
+                    "pending_validation": val_pending}
+        return {
+            "cfg": dataclasses.asdict(self.cfg),
+            "n": self.n, "quorum": self.quorum, "vrtol": self.vrtol,
+            "center": self.center.copy(), "lo": self.lo.copy(),
+            "hi": self.hi.copy(), "step": self.step.copy(),
+            "rng_state": self.rng.bit_generator.state,
+            "phase": self.phase, "phase_id": self.phase_id,
+            "iteration": self.iteration, "best_fitness": self.best_fitness,
+            "direction": None if self.direction is None
+            else self.direction.copy(),
+            "alpha_range": list(self.alpha_range),
+            "res_pts": [np.asarray(a).copy() for a in self._res_pts],
+            "res_ys": [np.asarray(a).copy() for a in self._res_ys],
+            "res_alphas": [np.asarray(a).copy() for a in self._res_alphas],
+            "res_tickets": [np.asarray(a).copy() for a in self._res_tickets],
+            "res_count": self._res_count,
+            "stats": dataclasses.asdict(self.stats),
+            "history": [{
+                "iteration": r.iteration, "best_fitness": r.best_fitness,
+                "avg_line_fitness": r.avg_line_fitness,
+                "center": np.asarray(r.center).copy(),
+                "evals_used": r.evals_used, "best_alpha": r.best_alpha,
+            } for r in self.history],
+            "next_ticket": self._next_ticket,
+            "candidates": cand, "cand_next": self._cand_next,
+            "candidate": None if self._candidate is None else {
+                "y": self._candidate[0],
+                "point": np.asarray(self._candidate[1]).copy(),
+                "alpha": self._candidate[2], "ticket": self._candidate[3]},
+            "votes": list(self._votes),
+            "pending_validation": self._pending_validation,
+            "bootstrapping": self._bootstrapping,
+            "line_avg": self._line_avg,
+            "spec_snapshot": spec,
+        }
+
+    def load_state(self, d: dict) -> None:
+        """Restore the state captured by ``state_dict`` into this engine
+        (which must have been built with a matching config/dimension —
+        checked, since a silent mismatch would produce a plausible but
+        wrong continuation)."""
+        if int(d["n"]) != self.n:
+            raise ValueError(f"state is {d['n']}-dimensional, engine is "
+                             f"{self.n}-dimensional")
+        if dict(d["cfg"]) != dataclasses.asdict(self.cfg):
+            raise ValueError("state was captured under a different AnmConfig")
+        self.quorum = int(d["quorum"])
+        self.vrtol = float(d["vrtol"])
+        self.center = np.asarray(d["center"], np.float64)
+        self.lo = np.asarray(d["lo"], np.float64)
+        self.hi = np.asarray(d["hi"], np.float64)
+        self.step = np.asarray(d["step"], np.float64)
+        self.rng.bit_generator.state = d["rng_state"]
+        self.phase = d["phase"]
+        self.phase_id = int(d["phase_id"])
+        self.iteration = int(d["iteration"])
+        self.best_fitness = float(d["best_fitness"])
+        self.direction = (None if d["direction"] is None
+                          else np.asarray(d["direction"], np.float64))
+        self.alpha_range = (float(d["alpha_range"][0]),
+                            float(d["alpha_range"][1]))
+        self._res_pts = [np.asarray(a, np.float64) for a in d["res_pts"]]
+        self._res_ys = [np.asarray(a, np.float64) for a in d["res_ys"]]
+        self._res_alphas = [np.asarray(a, np.float64)
+                            for a in d["res_alphas"]]
+        self._res_tickets = [np.asarray(a, np.int64)
+                             for a in d["res_tickets"]]
+        self._res_count = int(d["res_count"])
+        self.stats = EngineStats(**{k: int(v) for k, v in d["stats"].items()})
+        self.history = [IterationRecord(
+            iteration=int(r["iteration"]),
+            best_fitness=float(r["best_fitness"]),
+            avg_line_fitness=float(r["avg_line_fitness"]),
+            center=np.asarray(r["center"], np.float64),
+            evals_used=int(r["evals_used"]),
+            best_alpha=float(r["best_alpha"])) for r in d["history"]]
+        self._next_ticket = int(d["next_ticket"])
+        c = d["candidates"]
+        self._candidates = None if c is None else (
+            np.asarray(c[0], np.float64), np.asarray(c[1], np.float64),
+            np.asarray(c[2], np.float64), np.asarray(c[3], np.int64))
+        self._cand_next = int(d["cand_next"])
+        cd = d["candidate"]
+        self._candidate = None if cd is None else (
+            float(cd["y"]), np.asarray(cd["point"], np.float64),
+            float(cd["alpha"]), int(cd["ticket"]))
+        self._votes = [float(v) for v in d["votes"]]
+        self._pending_validation = int(d["pending_validation"])
+        self._bootstrapping = bool(d["bootstrapping"])
+        self._line_avg = float(d["line_avg"])
+        sp = d["spec_snapshot"]
+        self._spec_snapshot = None if sp is None else (
+            sp["rng_state"], int(sp["ticket"]), int(sp["issued"]),
+            int(sp["validations_issued"]), int(sp["pending_validation"]))
+
     def reissue_validation(self) -> Optional[EvalRequest]:
         """Extra quorum replica beyond the pending budget — for substrates
         whose replicas can be lost (host failure / reissue timeout)."""

@@ -7,13 +7,20 @@ What remains here is the BOINC-shaped substrate adapter —
   * workunit ids and the outstanding-work table,
   * stale filtering (the engine discards by phase id; this layer merely
     carries it through the WorkUnit),
-  * per-host turnaround AND return-rate tracking for reliable-host
-    scheduling: validation replicas, which gate the next iteration, go
-    only to hosts with below-median observed turnaround that actually
-    return the work they take — a fast host that vanishes with its
-    results records no turnaround at all, so turnaround alone would keep
-    it "reliable" forever,
+  * per-host reliability through the shared ``HostRegistry``
+    (``repro/server/registry.py``, DESIGN.md §9): turnaround AND
+    return-rate tracking for reliable-host scheduling — validation
+    replicas, which gate the next iteration, go only to hosts with
+    below-median observed turnaround that actually return the work they
+    take (a fast host that vanishes with its results records no
+    turnaround at all, so turnaround alone would keep it "reliable"
+    forever), with a minimum-sample cold-start grace so a brand-new host
+    is not excluded before its first result could possibly arrive,
   * a reissue timeout for validation replicas lost to vanished hosts.
+
+The registry is injectable: the service layer (``repro/server``) shares
+ONE registry across every search it fronts and serializes it into its
+crash checkpoints; standalone use builds a private one.
 
 Semantics reproduced from the paper:
   * work is generated on demand — a fresh random point per request, no
@@ -34,7 +41,8 @@ import numpy as np
 
 from repro.core.engine import (AnmConfig, AnmEngine, EngineStats, EvalRequest,
                                EvalResult, IterationRecord, LINESEARCH,
-                               VALIDATING)
+                               Transition, VALIDATING)
+from repro.server.registry import HostRegistry
 
 ServerStats = EngineStats             # back-compat alias
 
@@ -52,23 +60,37 @@ class WorkUnit:
 class FgdoAnmServer:
     """Asynchronous Newton method as a BOINC-style server over AnmEngine."""
 
-    def __init__(self, x0, lo, hi, step, cfg: AnmConfig = AnmConfig(),
+    def __init__(self, x0=None, lo=None, hi=None, step=None,
+                 cfg: AnmConfig = AnmConfig(),
                  seed: int = 0, validation_quorum: int = 2,
                  validation_rtol: float = 1e-6,
                  val_reissue_timeout: float = 600.0,
-                 min_return_rate: float = 0.5, min_issued_for_rate: int = 4):
-        self.engine = AnmEngine(x0, lo, hi, step, cfg, seed=seed,
-                                validation_quorum=validation_quorum,
-                                validation_rtol=validation_rtol)
-        self.cfg = cfg
+                 min_return_rate: float = 0.5, min_issued_for_rate: int = 4,
+                 *, engine: Optional[AnmEngine] = None,
+                 registry: Optional[HostRegistry] = None,
+                 overcommit: Optional[float] = None):
+        if engine is None:
+            engine = AnmEngine(x0, lo, hi, step, cfg, seed=seed,
+                               validation_quorum=validation_quorum,
+                               validation_rtol=validation_rtol)
+        self.engine = engine
+        self.cfg = engine.cfg
         self.val_reissue_timeout = val_reissue_timeout
-        self.min_return_rate = min_return_rate
-        self.min_issued_for_rate = min_issued_for_rate
+        # one registry per fleet: the service layer shares it across every
+        # search it fronts, standalone adapters own a private one
+        self.registry = registry if registry is not None else HostRegistry(
+            min_return_rate=min_return_rate,
+            min_issued_for_rate=min_issued_for_rate)
+        # feeder throttle (BOINC's bounded shared-memory feeder, the same
+        # policy as the batched grid's issuance cap): outstanding
+        # current-phase work is held under ``wanted() × overcommit``.
+        # ``None`` (the default) keeps the historical fire-hose behavior —
+        # the per-event simulator tests pin trajectories against it — while
+        # the service layer passes 2.0 so a phase that needs m results
+        # costs ~2m evaluations instead of n_hosts.
+        self.overcommit = overcommit
         self._last_val_issue = 0.0
         self.outstanding: Dict[int, WorkUnit] = {}
-        self._host_turnaround: Dict[int, float] = {}
-        self._host_issued: Dict[int, int] = {}
-        self._host_returned: Dict[int, int] = {}
 
     # -- engine views (back-compat surface) ---------------------------------
 
@@ -122,27 +144,32 @@ class FgdoAnmServer:
     def history(self) -> List[IterationRecord]:
         return self.engine.history
 
+    # registry views kept for inspection/back-compat (tests read these)
+
+    @property
+    def _host_issued(self) -> Dict[int, int]:
+        return {h: r.issued for h, r in self.registry.hosts.items()}
+
+    @property
+    def _host_returned(self) -> Dict[int, int]:
+        return {h: r.returned for h, r in self.registry.hosts.items()}
+
+    @property
+    def _host_turnaround(self) -> Dict[int, float]:
+        return {h: r.ewma_latency for h, r in self.registry.hosts.items()
+                if r.ewma_latency is not None}
+
     # -- reliable-host scheduling -------------------------------------------
 
     def _host_returns(self, host_id: int) -> bool:
-        """Return-rate gate: a host that takes work and vanishes never
-        records a turnaround, so turnaround alone is failure-blind — judge
-        it by what it RETURNS.  Never bypassed, not even by the reissue
-        timeout: handing a latency-critical replica to a known black hole
-        guarantees another loss."""
-        issued = self._host_issued.get(host_id, 0)
-        return not (issued >= self.min_issued_for_rate and
-                    self._host_returned.get(host_id, 0) <
-                    self.min_return_rate * issued)
+        """Return-rate gate (cold-start grace included) — see
+        ``HostRegistry.returns_work``.  Never bypassed, not even by the
+        reissue timeout: handing a latency-critical replica to a known
+        black hole guarantees another loss."""
+        return self.registry.returns_work(host_id)
 
     def _host_reliable(self, host_id: int) -> bool:
-        if not self._host_returns(host_id):
-            return False
-        t = self._host_turnaround.get(host_id)
-        if t is None or len(self._host_turnaround) < 4:
-            return True              # unknown hosts get the benefit of doubt
-        med = float(np.median(list(self._host_turnaround.values())))
-        return t <= med
+        return self.registry.reliable(host_id)
 
     # -- work generation ----------------------------------------------------
 
@@ -182,6 +209,18 @@ class FgdoAnmServer:
                            now - wu.issued_at <= self.val_reissue_timeout)
                 if live >= 2:
                     return None
+            if self.overcommit is not None:
+                # entries from finished phases only feed live counts, so
+                # they are pruned rather than held forever (their results,
+                # if they ever arrive, are assimilated from the caller's
+                # own workunit record and discarded as phase-stale)
+                for wid in [wid for wid, wu in self.outstanding.items()
+                            if wu.phase_id != eng.phase_id]:
+                    del self.outstanding[wid]
+                live = sum(1 for wu in self.outstanding.values()
+                           if now - wu.issued_at <= self.val_reissue_timeout)
+                if live >= int(np.ceil(eng.wanted() * self.overcommit)):
+                    return None
             reqs = eng.generate(1)
             if not reqs:
                 return None
@@ -189,20 +228,22 @@ class FgdoAnmServer:
         wu = WorkUnit(req.ticket, req.phase_id, np.asarray(req.point),
                       req.alpha, req.validates, issued_at=now)
         self.outstanding[wu.wu_id] = wu
-        self._host_issued[host_id] = self._host_issued.get(host_id, 0) + 1
+        self.registry.on_issue(host_id, now)
         return wu
 
     # -- assimilation -------------------------------------------------------
 
-    def assimilate(self, wu: WorkUnit, y: float, host_id: int, now: float):
+    def assimilate(self, wu: WorkUnit, y: float, host_id: int,
+                   now: float) -> List[Transition]:
         self.outstanding.pop(wu.wu_id, None)
-        # track per-host return rate + turnaround for reliable-host scheduling
-        self._host_returned[host_id] = self._host_returned.get(host_id, 0) + 1
-        ta = max(now - wu.issued_at, 1e-9)
-        prev = self._host_turnaround.get(host_id)
-        self._host_turnaround[host_id] = ta if prev is None else 0.7 * prev + 0.3 * ta
+        # per-host return rate + turnaround feed reliable-host scheduling;
+        # phase-staleness is knowable before the engine sees the result,
+        # so the registry's per-host valid-rate costs nothing extra
+        self.registry.on_result(host_id, now,
+                                max(now - wu.issued_at, 1e-9),
+                                stale=wu.phase_id != self.engine.phase_id)
         if self.engine.done:
-            return
+            return []
         req = EvalRequest(wu.wu_id, wu.phase_id, wu.point, wu.alpha,
                           wu.validates)
         transitions = self.engine.assimilate([EvalResult(req, float(y))])
@@ -211,3 +252,34 @@ class FgdoAnmServer:
         # gate isn't bypassed by a stale timestamp from the previous round
         if any(t.kind == "validating" for t in transitions):
             self._last_val_issue = now
+        return transitions
+
+    # -- state serialization (service layer, DESIGN.md §9) ------------------
+
+    def state_dict(self) -> dict:
+        """Adapter state for the crash checkpoint: the engine, the
+        outstanding-work table and the reissue clock.  The shared registry
+        is serialized ONCE by the owning work server, not per adapter."""
+        return {
+            "engine": self.engine.state_dict(),
+            "last_val_issue": self._last_val_issue,
+            "outstanding": [{
+                "wu_id": wu.wu_id, "phase_id": wu.phase_id,
+                "point": np.asarray(wu.point),
+                "alpha": wu.alpha, "validates": wu.validates,
+                "issued_at": wu.issued_at,
+            } for wu in self.outstanding.values()],
+        }
+
+    def load_state(self, d: dict) -> None:
+        self.engine.load_state(d["engine"])
+        self._last_val_issue = float(d["last_val_issue"])
+        self.outstanding = {}
+        for w in d["outstanding"]:
+            wu = WorkUnit(int(w["wu_id"]), int(w["phase_id"]),
+                          np.asarray(w["point"], np.float64),
+                          float(w["alpha"]),
+                          None if w["validates"] is None
+                          else int(w["validates"]),
+                          issued_at=float(w["issued_at"]))
+            self.outstanding[wu.wu_id] = wu

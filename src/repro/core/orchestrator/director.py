@@ -42,6 +42,16 @@ from repro.core.substrates.batched_grid import BatchedVolunteerGrid
 RESTART_SEED_STRIDE = 104729
 
 
+def dominated_cut(best: float, kill_margin: float) -> float:
+    """THE portfolio kill threshold: a search trailing the incumbent by
+    more than ``kill_margin`` on the sign-safe ``|best| + 1`` scale (the
+    same scale as ``grid.malicious_lie``) is dominated.  Shared by the
+    director's between-round policy and the work server's portfolio
+    routing (``repro/server/server.py``), so the two layers can never
+    disagree about what "dominated" means."""
+    return best + kill_margin * (abs(best) + 1.0)
+
+
 @dataclasses.dataclass(frozen=True)
 class SearchSpec:
     """Everything needed to run one search — and to REPRODUCE it alone:
@@ -172,8 +182,7 @@ class SearchDirector:
         inc = self._incumbent(everyone)
         if inc is None:
             return []
-        cut = inc.engine.best_fitness \
-            + self.kill_margin * (abs(inc.engine.best_fitness) + 1.0)
+        cut = dominated_cut(inc.engine.best_fitness, self.kill_margin)
         return [ls for ls in live
                 if ls.engine.iteration >= self.probation_iterations
                 and ls.engine.best_fitness > cut]

@@ -23,11 +23,27 @@ coalesced over ONE shared backend — in-process and shard_map'd over the
 production mesh — where every orchestrated search must commit
 bit-identical iterates to the same spec run alone on the same backend.
 
+``--substrate server`` runs the service-layer kill/restore smoke
+(DESIGN.md §9): a seeded search through the work server + simulated
+client fleet, SIGKILLed mid-search and restored from its snapshot +
+replay log — the restored run must commit bit-identical final iterates
+and identical final engine stats vs the same spec run uninterrupted, on
+BOTH the loopback and the TCP transport, and the in-process and pod-mesh
+evaluation paths must agree.
+
+The substrate names, descriptions and runners live in ONE registry
+(``repro/launch/substrates.py``) — argparse ``choices`` derive from it
+(an unknown name fails at parse time) and ``--list-substrates`` prints
+it; ``benchmarks/scalability.py`` validates its own substrate filter
+against the same dict.
+
 Usage:
     python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k
     python -m repro.launch.dryrun --all [--mesh pod|multipod|both] [--skip-existing]
     python -m repro.launch.dryrun --substrate pod_mesh
     python -m repro.launch.dryrun --substrate multi_search
+    python -m repro.launch.dryrun --substrate server
+    python -m repro.launch.dryrun --list-substrates
 """
 import argparse
 import functools
@@ -41,6 +57,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ARCH_NAMES, SHAPES, cell_is_runnable, get_config
 from repro.launch.mesh import make_production_mesh
+from repro.launch.substrates import SUBSTRATES, list_substrates
 from repro.models import (
     ShardCtx, cache_specs, init_cache, init_params, input_specs,
     make_prefill_step, make_serve_step, make_train_step, mesh_axes, param_specs,
@@ -393,6 +410,176 @@ def run_multi_search_smoke(out_dir: str, n_searches: int = 4, m: int = 24,
     return ok
 
 
+def run_server_smoke(out_dir: str, n_hosts: int = 160, m: int = 24,
+                     iterations: int = 4, n_stars: int = 400) -> bool:
+    """Service-layer kill/restore smoke (``--substrate server``).
+
+    The seeded smoke search (``repro.server.sim.smoke_problem``) runs four
+    ways, every subprocess with a CLEAN single-device CPU environment (the
+    dryrun's forced 512-device platform stays in THIS process):
+
+      1. uninterrupted, loopback transport                → the baseline;
+      2. uninterrupted, pod-mesh evaluation path          → must equal 1
+         (row-independence across evaluation widths, DESIGN.md §6/§8) —
+         plus an IN-PROCESS run over the production 16×16 mesh here in
+         the parent, exercising the real partitioning;
+      3. SIGKILLed mid-search on loopback, restored from snapshot +
+         replay log, run to completion                    → must equal 1;
+      4. the same kill/restore over the TCP transport     → must equal 1.
+
+    "Equal" is the hard service-layer contract: bit-identical committed
+    centers and fitness history AND identical final ``EngineStats``.
+    Writes artifacts/dryrun/substrate_server.json; returns pass/fail.
+    """
+    import shutil
+    import signal
+    import subprocess
+    import sys
+    import tempfile
+
+    child_env = {k: v for k, v in os.environ.items() if k != "XLA_FLAGS"}
+    child_env["JAX_PLATFORMS"] = "cpu"
+    src_dir = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                           ".."))
+    child_env["PYTHONPATH"] = src_dir + (
+        ":" + child_env["PYTHONPATH"] if child_env.get("PYTHONPATH") else "")
+    spec_args = ["--n-hosts", str(n_hosts), "--m", str(m),
+                 "--iterations", str(iterations), "--n-stars", str(n_stars)]
+
+    def child(extra, timeout=600):
+        cmd = [sys.executable, "-m", "repro.server.sim"] + spec_args + extra
+        return subprocess.run(cmd, env=child_env, timeout=timeout,
+                              capture_output=True, text=True)
+
+    def load(path):
+        with open(path) as f:
+            return json.load(f)
+
+    def trajectories_equal(a, b):
+        return (a["history"] == b["history"]
+                and a["iteration"] == b["iteration"]
+                and a["best_fitness"] == b["best_fitness"]
+                and a["engine_stats"] == b["engine_stats"])
+
+    tmp = tempfile.mkdtemp(prefix="server_smoke_")
+    report = {"n_hosts": n_hosts, "m": m, "iterations": iterations}
+    ok = True
+    try:
+        # 1+2: uninterrupted baselines on both evaluation paths
+        base_path = os.path.join(tmp, "base.json")
+        r = child(["--out", base_path])
+        if r.returncode != 0:
+            print(r.stdout + r.stderr)
+            raise RuntimeError("baseline child failed")
+        base = load(base_path)
+        pod_path = os.path.join(tmp, "pod.json")
+        r = child(["--backend", "pod_mesh", "--out", pod_path])
+        if r.returncode != 0:
+            print(r.stdout + r.stderr)
+            raise RuntimeError("pod-backend child failed")
+        pod = load(pod_path)
+        backend_ok = trajectories_equal(base, pod)
+        # ... and the REAL 16x16 partitioning, in-parent on the forced
+        # 512-device platform (the whole point of the dryrun environment)
+        from repro.core.substrates.pod_mesh import PodMeshEvalBackend
+        from repro.server.sim import (ServerSubstrate, result_doc,
+                                      smoke_problem)
+        spec, fleet, f_batch = smoke_problem(
+            n_stars=n_stars, n_hosts=n_hosts, m=m, iterations=iterations)
+        mesh_backend = PodMeshEvalBackend(f_batch,
+                                          mesh=make_production_mesh())
+        mesh_doc = result_doc(
+            ServerSubstrate(spec, fleet, mesh_backend).run())
+        mesh_ok = trajectories_equal(base, mesh_doc)
+
+        # 3+4: SIGKILL mid-search, restore, compare — both transports
+        kills = {}
+        for transport in ("loopback", "tcp"):
+            ckpt = os.path.join(tmp, f"ckpt_{transport}")
+            proc = subprocess.Popen(
+                [sys.executable, "-m", "repro.server.sim", *spec_args,
+                 "--transport", transport, "--ckpt-dir", ckpt,
+                 "--snapshot-every", "200", "--throttle-s", "0.002"],
+                env=child_env, stdout=subprocess.PIPE,
+                stderr=subprocess.PIPE)
+            log_path = os.path.join(ckpt, "replay.jsonl")
+            deadline = time.time() + 300
+            killed_mid_run = False
+            # kill once ~40% of the baseline's message count has been
+            # logged: deep enough that the kill lands well past the
+            # bootstrap, with most of the run still ahead (the throttle
+            # in the child stretches the wall-clock window so the 20 ms
+            # poll cannot miss it)
+            kill_after = max(200, int(0.4 * base["pool"]["messages"]))
+            while time.time() < deadline:
+                if proc.poll() is not None:
+                    break             # finished before we could kill: fail
+                has_snap = os.path.isdir(ckpt) and any(
+                    f.startswith("snapshot_") for f in os.listdir(ckpt))
+                log_lines = 0
+                if os.path.exists(log_path):
+                    with open(log_path, "rb") as f:
+                        log_lines = f.read().count(b"\n")
+                if has_snap and log_lines >= kill_after:
+                    proc.send_signal(signal.SIGKILL)
+                    proc.wait(timeout=30)
+                    killed_mid_run = True
+                    break
+                time.sleep(0.02)
+            if not killed_mid_run:
+                proc.kill()
+                kills[transport] = {"killed_mid_run": False, "ok": False}
+                ok = False
+                continue
+            out_path = os.path.join(tmp, f"resume_{transport}.json")
+            r = child(["--transport", transport, "--ckpt-dir", ckpt,
+                       "--resume", "--out", out_path])
+            if r.returncode != 0:
+                print(r.stdout + r.stderr)
+                kills[transport] = {"killed_mid_run": True, "ok": False,
+                                    "error": "resume child failed"}
+                ok = False
+                continue
+            res = load(out_path)
+            t_ok = (trajectories_equal(base, res)
+                    and not res["recovered_done"])
+            kills[transport] = {
+                "killed_mid_run": True,
+                "recovered_done": res["recovered_done"],
+                "replayed": res["replayed"],
+                "resumed_leases": res["pool"]["resumed_leases"],
+                "trajectory_equal": trajectories_equal(base, res),
+                "ok": t_ok,
+            }
+            ok = ok and t_ok
+        report.update({
+            "baseline": {"iterations": base["iteration"],
+                         "best": base["best_fitness"],
+                         "messages": base["pool"]["messages"],
+                         "registry": base["registry"]},
+            "backend_parity_ok": backend_ok,
+            "production_mesh_parity_ok": mesh_ok,
+            "kill_restore": kills,
+        })
+        ok = ok and backend_ok and mesh_ok
+    except Exception as e:  # noqa: BLE001 — smoke must report, not die
+        report["error"] = str(e)
+        ok = False
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+    report["parity_ok"] = ok
+    path = os.path.join(out_dir, "substrate_server.json")
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2)
+    kr = report.get("kill_restore", {})
+    print(f"[{'ok' if ok else 'FAIL'}] substrate server: "
+          f"backend_parity={report.get('backend_parity_ok')} "
+          f"mesh_parity={report.get('production_mesh_parity_ok')} "
+          f"loopback_kill={kr.get('loopback', {}).get('ok')} "
+          f"tcp_kill={kr.get('tcp', {}).get('ok')} -> {path}")
+    return ok
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -418,19 +605,27 @@ def main():
     ap.add_argument("--quant-cache", action="store_true",
                     help="int8 KV/latent cache (perf variant)")
     ap.add_argument("--suffix", default="", help="artifact filename suffix")
+    # choices come from the ONE substrate registry (launch/substrates.py):
+    # an unknown substrate fails at parse time instead of falling through
+    # to the model-cell path
     ap.add_argument("--substrate", default=None,
-                    choices=["pod_mesh", "multi_search"],
+                    choices=sorted(SUBSTRATES),
                     help="run the substrate smoke instead of model cells")
+    ap.add_argument("--list-substrates", action="store_true",
+                    help="print the registered substrate smokes and exit")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
+
+    if args.list_substrates:
+        print(list_substrates())
+        raise SystemExit(0)
 
     out_dir = args.out or os.path.abspath(ARTIFACTS)
     os.makedirs(out_dir, exist_ok=True)
 
-    if args.substrate == "pod_mesh":
-        raise SystemExit(0 if run_substrate_smoke(out_dir) else 1)
-    if args.substrate == "multi_search":
-        raise SystemExit(0 if run_multi_search_smoke(out_dir) else 1)
+    if args.substrate is not None:
+        runner = SUBSTRATES[args.substrate].resolve()
+        raise SystemExit(0 if runner(out_dir) else 1)
     meshes = {"pod": [False], "multipod": [True], "both": [False, True]}[args.mesh]
 
     archs = ARCH_NAMES if (args.all or args.arch is None) else [args.arch]

@@ -1,0 +1,56 @@
+"""THE substrate-smoke registry: one dict, every consumer derives from it.
+
+``repro.launch.dryrun --substrate X`` used to hardcode its choices and an
+unknown name fell through to the model-cell path late; now argparse
+``choices`` come from this dict, ``--list-substrates`` prints it, and
+``benchmarks/scalability.py`` validates its own ``--substrate`` filter
+against the same keys — so adding a substrate smoke is ONE entry here.
+
+Import-side-effect free on purpose: ``repro.launch.dryrun`` forces a
+512-device host platform at import time, so runners are referenced by
+dotted path and resolved lazily — a benchmark importing this module for
+the names must never accidentally reconfigure its own jax platform.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Callable, Dict
+
+
+@dataclasses.dataclass(frozen=True)
+class SubstrateSmoke:
+    name: str
+    description: str
+    runner: str                       # "module:function", resolved lazily
+
+    def resolve(self) -> Callable:
+        mod, fn = self.runner.split(":")
+        return getattr(importlib.import_module(mod), fn)
+
+
+SUBSTRATES: Dict[str, SubstrateSmoke] = {
+    "pod_mesh": SubstrateSmoke(
+        "pod_mesh",
+        "batched grid sync + pipelined + shard_map pod-mesh backend on the "
+        "forced 512-device mesh; bit-identical iterates across all three",
+        "repro.launch.dryrun:run_substrate_smoke"),
+    "multi_search": SubstrateSmoke(
+        "multi_search",
+        "coalesced multi-search portfolio over one shared backend, "
+        "in-process AND pod mesh; every search bit-identical to its solo "
+        "run",
+        "repro.launch.dryrun:run_multi_search_smoke"),
+    "server": SubstrateSmoke(
+        "server",
+        "fault-tolerant work server: seeded search over loopback and TCP "
+        "transports, SIGKILLed mid-search and restored from snapshot + "
+        "replay log; restored run bit-identical to uninterrupted",
+        "repro.launch.dryrun:run_server_smoke"),
+}
+
+
+def list_substrates() -> str:
+    width = max(len(n) for n in SUBSTRATES)
+    return "\n".join(f"{s.name:<{width}}  {s.description}"
+                     for s in SUBSTRATES.values())

@@ -1,0 +1,40 @@
+"""Fault-tolerant FGDO service layer (DESIGN.md §9).
+
+A BOINC-style work server over the ANM engine's generate/assimilate seam:
+
+  * ``protocol``   — versioned msgpack/JSON-framed wire protocol;
+  * ``registry``   — host reliability, latency and churn tracking;
+  * ``checkpoint`` — append-only replay log + snapshots (crash recovery);
+  * ``transport``  — in-process loopback and TCP transports;
+  * ``server``     — the deterministic lease-granting work server;
+  * ``sim``        — the simulated volunteer client pool + the
+                     ``ServerSubstrate`` end-to-end driver.
+
+Attribute access is lazy: ``core/fgdo.py`` imports ``repro.server.registry``
+while ``repro.server.server`` imports ``core.fgdo`` back — eager package
+imports here would make that pair circular.
+"""
+from __future__ import annotations
+
+import importlib
+
+_EXPORTS = {
+    "HostRegistry": "repro.server.registry",
+    "HostRecord": "repro.server.registry",
+    "WorkServer": "repro.server.server",
+    "CheckpointManager": "repro.server.checkpoint",
+    "LoopbackTransport": "repro.server.transport",
+    "TcpTransport": "repro.server.transport",
+    "make_transport": "repro.server.transport",
+    "SimClientPool": "repro.server.sim",
+    "ServerSubstrate": "repro.server.sim",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    mod = _EXPORTS.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    return getattr(importlib.import_module(mod), name)

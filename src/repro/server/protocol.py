@@ -1,0 +1,191 @@
+"""Versioned wire protocol for the FGDO work server (DESIGN.md §9).
+
+Frames.  Every message travels as a length-prefixed frame::
+
+    [4-byte big-endian payload length][1-byte codec][codec-encoded body]
+
+The codec byte makes the framing self-describing (a JSON client can talk
+to a msgpack-preferring server and vice versa), and the body always
+carries ``"v": PROTOCOL_VERSION`` — a mismatched peer gets a clean
+``ProtocolError`` instead of a misparsed field.  msgpack is used when the
+``msgpack`` package is importable, JSON otherwise (both round-trip float64
+exactly, which the bit-identical resume contract relies on: fitness values
+and points cross the wire and must come back the same bits).
+
+Message kinds (client → server)::
+
+    register       {host_id, now}
+    request_work   {host_id, now}
+    report_result  {host_id, search, wu, y, now}
+    heartbeat      {host_id, now}
+    shutdown       {now}
+    status         {}                      # read-only, never mutates
+
+and replies (server → client)::
+
+    registered     {host_id}
+    work           {search, wu, phase, point, alpha, validates, deadline}
+    no_work        {retry_after, done}
+    ack            {done, iteration, best}
+    status         {…summary…}
+    error          {error}
+
+``wu`` ids are the engine's tickets (unique per search); ``validates``
+carries the candidate ticket a quorum replica re-checks — the replica tag
+that lets a client know it is voting, not exploring.  ``deadline`` is the
+lease expiry: a result reported after it is still assimilated (the
+engine's phase-stale filter is the semantic gate) but the server stops
+counting on the lease.
+"""
+from __future__ import annotations
+
+import json
+import struct
+from typing import Iterator, Optional
+
+import numpy as np
+
+try:                                  # the container ships msgpack; the
+    import msgpack                    # JSON fallback keeps the protocol
+except ImportError:                   # importable without it
+    msgpack = None
+
+PROTOCOL_VERSION = 1
+CODEC_JSON, CODEC_MSGPACK = 1, 2
+DEFAULT_CODEC = CODEC_MSGPACK if msgpack is not None else CODEC_JSON
+
+_LEN = struct.Struct(">I")
+MAX_FRAME = 1 << 24                   # 16 MiB — no legitimate message is close
+
+
+class ProtocolError(Exception):
+    pass
+
+
+def _py(x):
+    """Numpy → plain python, recursively (codec-agnostic bodies)."""
+    if isinstance(x, np.ndarray):
+        return [_py(v) for v in x.tolist()]
+    if isinstance(x, np.generic):
+        return x.item()
+    if isinstance(x, dict):
+        return {k: _py(v) for k, v in x.items()}
+    if isinstance(x, (list, tuple)):
+        return [_py(v) for v in x]
+    return x
+
+
+def encode_message(msg: dict, codec: int = DEFAULT_CODEC) -> bytes:
+    body = dict(_py(msg))
+    body["v"] = PROTOCOL_VERSION
+    if codec == CODEC_MSGPACK:
+        if msgpack is None:
+            raise ProtocolError("msgpack codec requested but not installed")
+        raw = msgpack.packb(body, use_bin_type=True)
+    elif codec == CODEC_JSON:
+        raw = json.dumps(body).encode("utf-8")
+    else:
+        raise ProtocolError(f"unknown codec {codec}")
+    return bytes([codec]) + raw
+
+
+def decode_message(payload: bytes) -> dict:
+    if not payload:
+        raise ProtocolError("empty frame")
+    codec, raw = payload[0], payload[1:]
+    if codec == CODEC_MSGPACK:
+        if msgpack is None:
+            raise ProtocolError("peer sent msgpack but it is not installed")
+        body = msgpack.unpackb(raw, raw=False)
+    elif codec == CODEC_JSON:
+        body = json.loads(raw.decode("utf-8"))
+    else:
+        raise ProtocolError(f"unknown codec byte {codec}")
+    if body.get("v") != PROTOCOL_VERSION:
+        raise ProtocolError(
+            f"protocol version mismatch: peer={body.get('v')} "
+            f"ours={PROTOCOL_VERSION}")
+    return body
+
+
+def frame(payload: bytes) -> bytes:
+    if len(payload) > MAX_FRAME:
+        raise ProtocolError(f"frame of {len(payload)} bytes exceeds cap")
+    return _LEN.pack(len(payload)) + payload
+
+
+class FrameDecoder:
+    """Incremental frame splitter for stream transports: feed() raw bytes
+    as they arrive, iterate complete payloads."""
+
+    def __init__(self):
+        self._buf = bytearray()
+
+    def feed(self, data: bytes) -> Iterator[bytes]:
+        self._buf.extend(data)
+        while True:
+            if len(self._buf) < _LEN.size:
+                return
+            (n,) = _LEN.unpack_from(self._buf)
+            if n > MAX_FRAME:
+                raise ProtocolError(f"frame of {n} bytes exceeds cap")
+            if len(self._buf) < _LEN.size + n:
+                return
+            payload = bytes(self._buf[_LEN.size:_LEN.size + n])
+            del self._buf[:_LEN.size + n]
+            yield payload
+
+
+# -- message builders (clients) ----------------------------------------------
+
+def register(host_id: int, now: float) -> dict:
+    return {"kind": "register", "host_id": int(host_id), "now": float(now)}
+
+
+def request_work(host_id: int, now: float) -> dict:
+    return {"kind": "request_work", "host_id": int(host_id),
+            "now": float(now)}
+
+
+def report_result(host_id: int, search: int, wu: int, y: float,
+                  now: float) -> dict:
+    return {"kind": "report_result", "host_id": int(host_id),
+            "search": int(search), "wu": int(wu), "y": float(y),
+            "now": float(now)}
+
+
+def heartbeat(host_id: int, now: float) -> dict:
+    return {"kind": "heartbeat", "host_id": int(host_id), "now": float(now)}
+
+
+def shutdown(now: float) -> dict:
+    return {"kind": "shutdown", "now": float(now)}
+
+
+def status() -> dict:
+    return {"kind": "status"}
+
+
+# -- reply builders (server) --------------------------------------------------
+
+def work_reply(search: int, wu: int, phase: int, point, alpha: float,
+               validates: Optional[int], deadline: float) -> dict:
+    return {"kind": "work", "search": int(search), "wu": int(wu),
+            "phase": int(phase), "point": [float(v) for v in point],
+            "alpha": float(alpha),
+            "validates": None if validates is None else int(validates),
+            "deadline": float(deadline)}
+
+
+def no_work_reply(retry_after: float, done: bool) -> dict:
+    return {"kind": "no_work", "retry_after": float(retry_after),
+            "done": bool(done)}
+
+
+def ack_reply(done: bool, iteration: int, best: float) -> dict:
+    return {"kind": "ack", "done": bool(done), "iteration": int(iteration),
+            "best": float(best)}
+
+
+def error_reply(msg: str) -> dict:
+    return {"kind": "error", "error": str(msg)}

@@ -1,0 +1,201 @@
+"""Host registry: per-host reliability, latency and churn (DESIGN.md §9).
+
+The FGDO/BOINC server model assumes nothing about a volunteer host except
+what it has OBSERVED about it: how much work it took, how much it returned,
+how fast, and when it was last heard from.  ``HostRegistry`` is that
+observation store, shared by every layer that schedules work —
+
+  * ``core/fgdo.py`` reads the reliable-host gates (``returns_work`` /
+    ``reliable``) when handing out latency-critical validation replicas;
+  * the work server (``repro/server/server.py``) records every protocol
+    message here (issue/result/heartbeat/no-work backoff) and serializes
+    the registry into its crash checkpoints;
+  * the simulated client pool rebuilds its event schedule from
+    ``next_contact_at`` after a crash restore.
+
+Churn model: a host is ``alive`` while it keeps contacting the server,
+decays to ``suspect`` after ``suspect_after`` seconds of silence and to
+``dead`` after ``dead_after`` (swept lazily from message timestamps, so the
+transitions are deterministic in virtual time).  Any contact revives it —
+volunteer hosts come and go, and the pull model means a returning host
+simply starts requesting work again.
+
+Reliability gates (semantics carried over from the pre-registry
+``FgdoAnmServer``, pinned by ``tests/test_fgdo.py``):
+
+  * **return-rate gate** (``returns_work``): a host that takes work and
+    vanishes records no turnaround at all, so turnaround alone is
+    failure-blind — judge hosts by what they RETURN.  Cold-start grace:
+    the gate only engages after ``min_issued_for_rate`` workunits have
+    been issued, so a brand-new host with 1 issued / 0 returned (a 0%
+    return rate it never had a chance to improve) is not excluded before
+    its first result can possibly arrive;
+  * **latency gate** (``reliable``): below-median EWMA turnaround among
+    observed hosts, with benefit of the doubt while fewer than
+    ``min_latency_samples`` hosts have recorded one.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+ALIVE, SUSPECT, DEAD = "alive", "suspect", "dead"
+
+
+@dataclasses.dataclass
+class HostRecord:
+    """Everything the server knows about one host — all of it learned from
+    protocol messages, all of it serializable."""
+    host_id: int
+    registered_at: float = 0.0
+    last_seen: float = 0.0
+    issued: int = 0                   # workunits handed to this host
+    returned: int = 0                 # results it actually reported
+    stale: int = 0                    # returns that arrived phase-stale
+    ewma_latency: Optional[float] = None
+    state: str = ALIVE
+    nowork_streak: int = 0            # consecutive empty-handed requests
+    # when this host will next contact us (set on every reply; None while
+    # it holds a lease — its next contact derives from the lease).  The
+    # crash-restored client world is rebuilt from exactly this field.
+    next_contact_at: Optional[float] = 0.0
+
+    @property
+    def valid_rate(self) -> float:
+        """Fraction of returned results that were still usable (not
+        phase-stale) — observability, not a scheduling gate."""
+        return (self.returned - self.stale) / self.returned \
+            if self.returned else 1.0
+
+
+class HostRegistry:
+    def __init__(self, min_return_rate: float = 0.5,
+                 min_issued_for_rate: int = 4, latency_alpha: float = 0.3,
+                 min_latency_samples: int = 4, suspect_after: float = 300.0,
+                 dead_after: float = 1200.0):
+        self.min_return_rate = min_return_rate
+        self.min_issued_for_rate = min_issued_for_rate
+        self.latency_alpha = latency_alpha
+        self.min_latency_samples = min_latency_samples
+        self.suspect_after = suspect_after
+        self.dead_after = dead_after
+        self.hosts: Dict[int, HostRecord] = {}
+
+    # -- bookkeeping ---------------------------------------------------------
+
+    def record(self, host_id: int) -> HostRecord:
+        rec = self.hosts.get(host_id)
+        if rec is None:
+            rec = self.hosts[host_id] = HostRecord(host_id)
+        return rec
+
+    def register(self, host_id: int, now: float) -> HostRecord:
+        """Idempotent: re-registering (a client reconnecting after a server
+        crash) revives and touches the record, never resets its history."""
+        rec = self.record(host_id)
+        if rec.registered_at == 0.0 and rec.last_seen == 0.0:
+            rec.registered_at = now
+        return self.touch(host_id, now)
+
+    def touch(self, host_id: int, now: float) -> HostRecord:
+        """Any contact proves liveness and revives a suspect/dead host."""
+        rec = self.record(host_id)
+        rec.last_seen = max(rec.last_seen, now)
+        rec.state = ALIVE
+        return rec
+
+    def on_issue(self, host_id: int, now: float) -> None:
+        rec = self.touch(host_id, now)
+        rec.issued += 1
+        rec.nowork_streak = 0
+        rec.next_contact_at = None    # next contact derives from the lease
+
+    def on_result(self, host_id: int, now: float, turnaround: float,
+                  stale: bool = False) -> None:
+        rec = self.touch(host_id, now)
+        rec.returned += 1
+        if stale:
+            rec.stale += 1
+        ta = max(turnaround, 1e-9)
+        a = self.latency_alpha
+        rec.ewma_latency = ta if rec.ewma_latency is None \
+            else (1 - a) * rec.ewma_latency + a * ta
+        rec.nowork_streak = 0
+        rec.next_contact_at = now     # a client re-requests immediately
+
+    def on_no_work(self, host_id: int, now: float, retry_after: float) -> None:
+        rec = self.touch(host_id, now)
+        rec.nowork_streak += 1
+        rec.next_contact_at = now + retry_after
+
+    def sweep(self, now: float) -> None:
+        """Lazy churn transitions from message-time silence.  Deterministic:
+        driven only by the virtual timestamps messages carry."""
+        for rec in self.hosts.values():
+            silent = now - rec.last_seen
+            if silent > self.dead_after:
+                rec.state = DEAD
+            elif silent > self.suspect_after:
+                rec.state = SUSPECT
+
+    # -- scheduling gates ----------------------------------------------------
+
+    def returns_work(self, host_id: int) -> bool:
+        """Return-rate gate with the cold-start minimum-sample grace."""
+        rec = self.hosts.get(host_id)
+        if rec is None:
+            return True
+        return not (rec.issued >= self.min_issued_for_rate and
+                    rec.returned < self.min_return_rate * rec.issued)
+
+    def reliable(self, host_id: int) -> bool:
+        """Latency-critical work gate: returns work AND below-median EWMA
+        turnaround (unknown hosts get the benefit of the doubt while the
+        sample is small)."""
+        if not self.returns_work(host_id):
+            return False
+        rec = self.hosts.get(host_id)
+        t = None if rec is None else rec.ewma_latency
+        known = [r.ewma_latency for r in self.hosts.values()
+                 if r.ewma_latency is not None]
+        if t is None or len(known) < self.min_latency_samples:
+            return True
+        return t <= float(np.median(known))
+
+    # -- observability -------------------------------------------------------
+
+    def counts(self) -> Dict[str, int]:
+        out = {ALIVE: 0, SUSPECT: 0, DEAD: 0}
+        for rec in self.hosts.values():
+            out[rec.state] += 1
+        return out
+
+    def summary(self) -> dict:
+        recs = self.hosts.values()
+        lat = [r.ewma_latency for r in recs if r.ewma_latency is not None]
+        return {
+            "hosts": len(self.hosts), "states": self.counts(),
+            "issued": sum(r.issued for r in recs),
+            "returned": sum(r.returned for r in recs),
+            "stale_returns": sum(r.stale for r in recs),
+            "median_latency": float(np.median(lat)) if lat else None,
+            "excluded_by_return_rate": sum(
+                0 if self.returns_work(r.host_id) else 1 for r in recs),
+        }
+
+    # -- serialization -------------------------------------------------------
+
+    def state_dict(self) -> dict:
+        # vars() copy, not dataclasses.asdict: the recursive walk is ~50x
+        # slower and snapshots serialize thousands of host records
+        return {"hosts": {str(h): dict(vars(rec))
+                          for h, rec in self.hosts.items()}}
+
+    def load_state(self, d: dict) -> None:
+        self.hosts = {}
+        for h, rec in d["hosts"].items():
+            rec = dict(rec)
+            rec["host_id"] = int(rec["host_id"])
+            self.hosts[int(h)] = HostRecord(**rec)

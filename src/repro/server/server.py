@@ -1,0 +1,452 @@
+"""The FGDO work server: leases, host registry, portfolio routing.
+
+``WorkServer`` is the deterministic heart of the service layer
+(DESIGN.md §9): a pure message handler over the BOINC-shaped
+``FgdoAnmServer`` adapter (itself a thin substrate over ``AnmEngine`` —
+the server builds on the engine's generate/assimilate seam, never on
+phase logic).  Every mutation flows through ``handle(msg) -> reply``;
+every random draw lives in the engines' rngs, which are part of the
+state — so given a state and a message sequence, the server's behavior
+is a pure function.  That is the whole crash-recovery story: the
+checkpoint layer (``repro/server/checkpoint.py``) snapshots
+``state_dict()`` and replays the logged message suffix, and the restored
+server is bit-identical to the killed one.
+
+Leases.  Every granted workunit is a lease: ``(search, wu)`` → holder,
+issue time, deadline.  A result reported within the lease settles it; a
+lease past its deadline lapses (kept aside until the holder next makes
+contact, because the crash-restored client world is rebuilt from exactly
+these records) — the work itself is NOT re-generated: the paper's any-m
+phase semantics already absorb lost work, and validation replicas have
+their own reissue path inside ``FgdoAnmServer``.  A result arriving after
+its lease lapsed is still assimilated (the engine's phase-stale filter is
+the semantic authority) and counted as a late return.
+
+Portfolio.  The server can front one search or a whole multi-search
+portfolio: work requests round-robin across live searches (the PR-4
+``SearchSpec.build_engine`` is THE spec→engine construction, shared with
+the orchestrator), and the ``portfolio`` policy retires searches past
+probation that trail the incumbent by the orchestrator's own
+``dominated_cut`` margin — the same kill rule, imported, so the two
+layers cannot drift.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.fgdo import FgdoAnmServer, WorkUnit
+from repro.core.orchestrator.director import SearchSpec, dominated_cut
+from repro.server import protocol
+from repro.server.registry import HostRegistry
+
+RUNNING, DONE, KILLED = "running", "done", "killed"
+
+
+@dataclasses.dataclass
+class Lease:
+    search_id: int
+    wu_id: int
+    host_id: int
+    issued_at: float
+    deadline: float
+    wu: WorkUnit
+
+
+@dataclasses.dataclass
+class ServerCounters:
+    messages: int = 0
+    registrations: int = 0
+    leases_issued: int = 0
+    leases_lapsed: int = 0            # deadline passed before the result
+    leases_abandoned: int = 0         # holder re-requested without reporting
+    late_returns: int = 0             # result arrived after its lease lapsed
+    unknown_results: int = 0          # no lease on record (protocol misuse)
+    dropped_results: int = 0          # result for a killed search
+    nowork_replies: int = 0
+    heartbeats: int = 0
+
+
+@dataclasses.dataclass
+class SearchEntry:
+    search_id: int
+    name: str
+    fgdo: FgdoAnmServer
+    status: str = RUNNING
+
+
+class WorkServer:
+    """Deterministic message handler fronting one or many ANM searches."""
+
+    def __init__(self, specs: Sequence[SearchSpec], *,
+                 policy: str = "fixed", kill_margin: float = 0.5,
+                 probation_iterations: int = 2,
+                 lease_timeout: float = 480.0, idle_retry: float = 5.0,
+                 backoff_cap: float = 60.0,
+                 val_reissue_timeout: float = 600.0,
+                 overcommit: Optional[float] = 2.0,
+                 registry: Optional[HostRegistry] = None):
+        if policy not in ("fixed", "portfolio"):
+            raise ValueError(f"unknown policy {policy!r} (fixed|portfolio)")
+        self.specs = list(specs)
+        if not self.specs:
+            raise ValueError("need at least one SearchSpec")
+        self.policy = policy
+        self.kill_margin = kill_margin
+        self.probation_iterations = probation_iterations
+        self.lease_timeout = lease_timeout
+        self.idle_retry = idle_retry
+        self.backoff_cap = backoff_cap
+        self.val_reissue_timeout = val_reissue_timeout
+        self.overcommit = overcommit
+        self.registry = registry if registry is not None else HostRegistry()
+        self.searches = [
+            SearchEntry(i, spec.name, FgdoAnmServer(
+                cfg=spec.anm, engine=spec.build_engine(),
+                val_reissue_timeout=val_reissue_timeout,
+                registry=self.registry, overcommit=overcommit))
+            for i, spec in enumerate(self.specs)]
+        self.leases: Dict[Tuple[int, int], Lease] = {}
+        self.lapsed: Dict[Tuple[int, int], Lease] = {}
+        self.cursor = 0               # round-robin start for the next grant
+        self.now = 0.0
+        self.stopping = False
+        self.counters = ServerCounters()
+        # hot-path indices (derived state, rebuilt on load): the message
+        # loop must stay O(1)-ish per message, not O(n_hosts) — a 1024-host
+        # fleet sends tens of thousands of messages per run
+        self._host_lease: Dict[int, Tuple[int, int]] = {}   # ≤1 per host
+        self._host_lapsed: Dict[int, Tuple[int, int]] = {}
+        self._next_deadline = float("inf")
+        self._last_sweep = float("-inf")
+        self.sweep_interval = 5.0     # virtual seconds between churn sweeps
+
+    # -- introspection -------------------------------------------------------
+
+    @property
+    def done(self) -> bool:
+        return self.stopping or all(e.status != RUNNING
+                                    for e in self.searches)
+
+    @property
+    def engines(self):
+        return [e.fgdo.engine for e in self.searches]
+
+    def best(self) -> Tuple[Optional[int], float]:
+        """Incumbent (search_id, fitness) over the whole portfolio."""
+        best_id, best_y = None, float("inf")
+        for e in self.searches:
+            y = e.fgdo.engine.best_fitness
+            if np.isfinite(y) and y < best_y:
+                best_id, best_y = e.search_id, y
+        return best_id, best_y
+
+    def fingerprint(self) -> str:
+        """Identity stamped into snapshots: restoring a checkpoint into a
+        server built from different specs — or the same specs under
+        different behavior-affecting knobs (kill margin, lease timeout,
+        backoff, feeder throttle…) — must fail loudly, not produce a
+        plausible-but-wrong continuation."""
+        doc = [{
+            "name": s.name, "x0": np.asarray(s.x0).tolist(),
+            "lo": np.asarray(s.lo).tolist(),
+            "hi": np.asarray(s.hi).tolist(),
+            "step": np.asarray(s.step).tolist(),
+            "anm": dataclasses.asdict(s.anm),
+            "engine_seed": s.engine_seed,
+            "validation_quorum": s.validation_quorum,
+        } for s in self.specs]
+        doc.append({
+            "policy": self.policy, "kill_margin": self.kill_margin,
+            "probation_iterations": self.probation_iterations,
+            "lease_timeout": self.lease_timeout,
+            "idle_retry": self.idle_retry,
+            "backoff_cap": self.backoff_cap,
+            "val_reissue_timeout": self.val_reissue_timeout,
+            "overcommit": self.overcommit,
+        })
+        return hashlib.sha256(
+            json.dumps(doc, sort_keys=True).encode()).hexdigest()[:16]
+
+    # -- time / lease sweeps -------------------------------------------------
+
+    def _advance(self, now: float) -> None:
+        self.now = max(self.now, now)
+        if self.now - self._last_sweep >= self.sweep_interval:
+            # churn transitions move at suspect/dead granularity (hundreds
+            # of virtual seconds), so sweeping every few virtual seconds
+            # is exact enough AND keeps the per-message cost off the
+            # O(n_hosts) scan; deterministic — driven by message times
+            self.registry.sweep(self.now)
+            self._last_sweep = self.now
+        if self._next_deadline < self.now:
+            nxt = float("inf")
+            for k in list(self.leases):
+                l = self.leases[k]
+                if l.deadline < self.now:
+                    self.lapsed[k] = self.leases.pop(k)
+                    self._host_lease.pop(l.host_id, None)
+                    self._host_lapsed[l.host_id] = k
+                    self.counters.leases_lapsed += 1
+                else:
+                    nxt = min(nxt, l.deadline)
+            self._next_deadline = nxt
+
+    def _drop_lapsed_for(self, host_id: int) -> None:
+        """A host making contact supersedes its lapsed leases — they were
+        kept only so the crash-restored client world could reconstruct
+        the host's in-flight computation."""
+        k = self._host_lapsed.pop(host_id, None)
+        if k is not None:
+            self.lapsed.pop(k, None)
+
+    def _abandon_outstanding_for(self, host_id: int) -> None:
+        """A host ASKING for work holds nothing (clients compute one
+        workunit at a time), so any outstanding lease it still has on
+        record is abandoned — it vanished with the result.  Dropping it
+        here keeps the per-host lease invariant (≤ 1 record across
+        outstanding ∪ lapsed) that the crash-restored client world's
+        event rebuild depends on."""
+        k = self._host_lease.pop(host_id, None)
+        if k is not None:
+            del self.leases[k]
+            self.counters.leases_abandoned += 1
+
+    # -- message handling ----------------------------------------------------
+
+    def handle(self, msg: dict) -> dict:
+        kind = msg.get("kind")
+        if kind == "status":
+            # read-only by contract: not counted, not logged, no sweep —
+            # a monitoring poll must never perturb the replayable state
+            return self._status()
+        self.counters.messages += 1
+        if kind == "register":
+            return self._register(msg)
+        if kind == "request_work":
+            return self._request_work(msg)
+        if kind == "report_result":
+            return self._report_result(msg)
+        if kind == "heartbeat":
+            return self._heartbeat(msg)
+        if kind == "shutdown":
+            self.stopping = True
+            _, best_y = self.best()
+            return protocol.ack_reply(True, max(
+                e.fgdo.engine.iteration for e in self.searches), best_y)
+        return protocol.error_reply(f"unknown message kind {kind!r}")
+
+    def _register(self, msg: dict) -> dict:
+        self._advance(msg["now"])
+        rec = self.registry.register(int(msg["host_id"]), msg["now"])
+        # a freshly registered client requests immediately: pin its next
+        # contact so a crash between register and first request rebuilds
+        # the schedule exactly
+        rec.next_contact_at = float(msg["now"])
+        self.counters.registrations += 1
+        return {"kind": "registered", "host_id": int(msg["host_id"])}
+
+    def _request_work(self, msg: dict) -> dict:
+        host, now = int(msg["host_id"]), float(msg["now"])
+        self._advance(now)
+        self.registry.touch(host, now)
+        self._drop_lapsed_for(host)
+        self._abandon_outstanding_for(host)
+        if not self.done:
+            n = len(self.searches)
+            for i in range(n):
+                e = self.searches[(self.cursor + i) % n]
+                if e.status != RUNNING:
+                    continue
+                if e.fgdo.engine.done:
+                    e.status = DONE
+                    continue
+                wu = e.fgdo.generate_work(host, now)
+                if wu is None:
+                    continue
+                self.cursor = (e.search_id + 1) % n
+                deadline = now + self.lease_timeout
+                key = (e.search_id, wu.wu_id)
+                self.leases[key] = Lease(
+                    e.search_id, wu.wu_id, host, now, deadline, wu)
+                self._host_lease[host] = key
+                self._next_deadline = min(self._next_deadline, deadline)
+                self.counters.leases_issued += 1
+                # the registry's on_issue cleared next_contact_at: this
+                # host's next contact now derives from the lease
+                return protocol.work_reply(e.search_id, wu.wu_id,
+                                           wu.phase_id, wu.point, wu.alpha,
+                                           wu.validates, deadline)
+        rec = self.registry.record(host)
+        retry = min(self.idle_retry * (2 ** rec.nowork_streak),
+                    self.backoff_cap)
+        self.registry.on_no_work(host, now, retry)
+        self.counters.nowork_replies += 1
+        return protocol.no_work_reply(retry, self.done)
+
+    def _report_result(self, msg: dict) -> dict:
+        host, now = int(msg["host_id"]), float(msg["now"])
+        search, wu_id = int(msg["search"]), int(msg["wu"])
+        self._advance(now)
+        key = (search, wu_id)
+        lease = self.leases.pop(key, None)
+        if lease is not None:
+            if self._host_lease.get(lease.host_id) == key:
+                del self._host_lease[lease.host_id]
+        else:
+            lease = self.lapsed.pop(key, None)
+            if lease is not None:
+                self.counters.late_returns += 1
+                if self._host_lapsed.get(lease.host_id) == key:
+                    del self._host_lapsed[lease.host_id]
+        self._drop_lapsed_for(host)
+        e = self.searches[search] if 0 <= search < len(self.searches) \
+            else None
+        if lease is None or e is None:
+            # no lease on record: without the workunit payload there is
+            # nothing safe to assimilate — count and acknowledge
+            self.counters.unknown_results += 1
+            self.registry.touch(host, now)
+        elif e.status == KILLED:
+            # a killed search's engine is frozen (its committed history
+            # stays a prefix of the solo run, like the orchestrator's
+            # kill) — track the host's return, drop the result
+            self.registry.on_result(host, now,
+                                    max(now - lease.issued_at, 1e-9))
+            self.counters.dropped_results += 1
+        else:
+            e.fgdo.assimilate(lease.wu, float(msg["y"]), host, now)
+            if e.fgdo.engine.done:
+                e.status = DONE
+            if self.policy == "portfolio":
+                self._apply_portfolio()
+        _, best_y = self.best()
+        iteration = (e.fgdo.engine.iteration if e is not None
+                     else 0)
+        return protocol.ack_reply(self.done, iteration, best_y)
+
+    def _heartbeat(self, msg: dict) -> dict:
+        self._advance(msg["now"])
+        self.registry.touch(int(msg["host_id"]), msg["now"])
+        self.counters.heartbeats += 1
+        _, best_y = self.best()
+        return protocol.ack_reply(self.done, 0, best_y)
+
+    def _status(self) -> dict:
+        # read-only on purpose: the checkpoint layer skips logging it
+        best_id, best_y = self.best()
+        return {
+            "kind": "status", "now": self.now, "done": self.done,
+            "searches": [{
+                "search_id": e.search_id, "name": e.name,
+                "status": e.status,
+                "phase": e.fgdo.phase,
+                "iteration": e.fgdo.engine.iteration,
+                "best": e.fgdo.engine.best_fitness,
+            } for e in self.searches],
+            "incumbent": best_id, "best": best_y,
+            "leases": len(self.leases), "lapsed": len(self.lapsed),
+            "counters": dataclasses.asdict(self.counters),
+            "registry": self.registry.summary(),
+        }
+
+    def _apply_portfolio(self) -> None:
+        _, best_y = self.best()
+        if not np.isfinite(best_y):
+            return
+        cut = dominated_cut(best_y, self.kill_margin)
+        for e in self.searches:
+            if (e.status == RUNNING
+                    and e.fgdo.engine.iteration >= self.probation_iterations
+                    and e.fgdo.engine.best_fitness > cut):
+                e.status = KILLED
+
+    # -- crash-restore seams -------------------------------------------------
+
+    def world_view(self) -> dict:
+        """Everything a deterministic client world needs to rebuild its
+        event schedule after a restore: the lease tables (outstanding AND
+        lapsed — a lapsed lease's holder is still out there computing)
+        and each known host's next contact time."""
+        def lease_doc(l: Lease) -> dict:
+            return {"search": l.search_id, "wu": l.wu_id,
+                    "host_id": l.host_id, "issued_at": l.issued_at,
+                    "deadline": l.deadline,
+                    "phase": l.wu.phase_id,
+                    "point": np.asarray(l.wu.point),
+                    "alpha": l.wu.alpha, "validates": l.wu.validates}
+        return {
+            "now": self.now,
+            "leases": [lease_doc(l) for l in self.leases.values()],
+            "lapsed": [lease_doc(l) for l in self.lapsed.values()],
+            "hosts": [{"host_id": h, "state": r.state,
+                       "next_contact_at": r.next_contact_at}
+                      for h, r in self.registry.hosts.items()],
+        }
+
+    def state_dict(self) -> dict:
+        return {
+            "v": 1,
+            "now": self.now, "cursor": self.cursor,
+            "stopping": self.stopping,
+            "counters": dataclasses.asdict(self.counters),
+            "registry": self.registry.state_dict(),
+            "searches": [{"search_id": e.search_id, "status": e.status,
+                          "fgdo": e.fgdo.state_dict()}
+                         for e in self.searches],
+            "leases": [self._lease_state(l) for l in self.leases.values()],
+            "lapsed": [self._lease_state(l) for l in self.lapsed.values()],
+        }
+
+    @staticmethod
+    def _lease_state(l: Lease) -> dict:
+        return {"search_id": l.search_id, "wu_id": l.wu_id,
+                "host_id": l.host_id, "issued_at": l.issued_at,
+                "deadline": l.deadline,
+                "wu": {"wu_id": l.wu.wu_id, "phase_id": l.wu.phase_id,
+                       "point": np.asarray(l.wu.point),
+                       "alpha": l.wu.alpha, "validates": l.wu.validates,
+                       "issued_at": l.wu.issued_at}}
+
+    @staticmethod
+    def _lease_from_state(d: dict) -> Lease:
+        w = d["wu"]
+        wu = WorkUnit(int(w["wu_id"]), int(w["phase_id"]),
+                      np.asarray(w["point"], np.float64), float(w["alpha"]),
+                      None if w["validates"] is None else int(w["validates"]),
+                      issued_at=float(w["issued_at"]))
+        return Lease(int(d["search_id"]), int(d["wu_id"]),
+                     int(d["host_id"]), float(d["issued_at"]),
+                     float(d["deadline"]), wu)
+
+    def load_state(self, d: dict) -> None:
+        if len(d["searches"]) != len(self.searches):
+            raise ValueError("state has a different number of searches")
+        self.now = float(d["now"])
+        self.cursor = int(d["cursor"])
+        self.stopping = bool(d["stopping"])
+        self.counters = ServerCounters(
+            **{k: int(v) for k, v in d["counters"].items()})
+        self.registry.load_state(d["registry"])
+        for e, s in zip(self.searches, d["searches"]):
+            e.status = s["status"]
+            e.fgdo.load_state(s["fgdo"])
+        self.leases = {}
+        self._host_lease = {}
+        self._next_deadline = float("inf")
+        for ld in d["leases"]:
+            l = self._lease_from_state(ld)
+            self.leases[(l.search_id, l.wu_id)] = l
+            self._host_lease[l.host_id] = (l.search_id, l.wu_id)
+            self._next_deadline = min(self._next_deadline, l.deadline)
+        self.lapsed = {}
+        self._host_lapsed = {}
+        for ld in d["lapsed"]:
+            l = self._lease_from_state(ld)
+            self.lapsed[(l.search_id, l.wu_id)] = l
+            self._host_lapsed[l.host_id] = (l.search_id, l.wu_id)
+        self._last_sweep = float("-inf")

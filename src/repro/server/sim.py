@@ -1,0 +1,466 @@
+"""Simulated volunteer clients + the end-to-end server substrate.
+
+``SimClientPool`` replays the batched grid's host distributions — lognormal
+speeds, result loss, malicious corruption, staggered arrival, all from
+``grid.sample_hosts``/``GridConfig`` — as REAL protocol clients: every
+interaction is a framed request/reply through a transport (loopback bytes
+or TCP sockets), driven in virtual time by a deterministic event loop.
+
+Determinism and crash recovery hang on one property: **the client world is
+a pure function of the server's state**.  Per-workunit behavior (latency
+noise, result loss, the malicious draw) is keyed on ``(fleet seed, host,
+wu)`` — counter-based, not sequential — so a host computing workunit X
+produces the same result at the same virtual time whether or not the
+server was killed and restored in between.  After a restore,
+``resume_from(server.world_view())`` rebuilds the entire event schedule
+from the lease tables (outstanding AND lapsed) plus each idle host's
+``next_contact_at``: outstanding work is re-leased to exactly the hosts
+that held it, so the restored run replays the uninterrupted future —
+bit-identical committed iterates, the contract the dryrun smoke gates.
+
+Event ordering is canonical — ``(time, kind-priority, host)``, completions
+before requests — NOT insertion order, so a rebuilt queue sorts exactly
+like the original.  Fitness evaluation is lazily batched: all in-flight
+points with unknown values go through ONE ``EvalBackend`` bucket (with
+on-device malicious-corruption lanes) the first time any of them is
+needed, which is what keeps the loopback server within striking distance
+of the direct batched grid in the benchmark overhead row.
+
+``ServerSubstrate`` wires it all together: build (or recover) a
+``WorkServer``, attach the checkpoint manager, start a transport, run the
+pool to completion.  ``python -m repro.server.sim`` runs a seeded
+single-search smoke — the dryrun kill/restore harness launches it as a
+subprocess, SIGKILLs it mid-search, and relaunches with ``--resume``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.grid import GridConfig, sample_hosts
+from repro.core.orchestrator.director import SearchSpec
+from repro.core.substrates.eval_backend import EvalBackend
+from repro.server import protocol
+from repro.server.checkpoint import CheckpointManager
+from repro.server.server import WorkServer
+from repro.server.transport import make_transport
+
+PRIO_COMPLETE, PRIO_REQUEST = 0, 1
+
+#: domain salts for the counter-based per-host / per-(host, wu) draws —
+#: distinct streams that can never collide with each other or the
+#: sequential ``sample_hosts`` population draw
+_ONLINE_SALT = 0x0F51DE
+_WU_SALT = 0x5EEDED
+
+
+class SimulatedCrash(RuntimeError):
+    """Raised by the pool when ``max_messages`` is hit — the in-process
+    stand-in for a SIGKILL (tests recover from the checkpoint dir without
+    paying for a subprocess)."""
+
+
+def _wu_draws(fleet_seed: int, host: int, wu: int) -> Tuple[float, float, float]:
+    """(latency noise in [0.8, 1.2], loss uniform, malicious u in
+    [0.2, 0.8]) for one (host, workunit) pair — keyed, not sequential, so
+    the draw survives a server crash/restore unchanged."""
+    rng = np.random.default_rng(
+        np.random.SeedSequence((_WU_SALT, fleet_seed, host, wu)))
+    return (float(rng.uniform(0.8, 1.2)), float(rng.random()),
+            float(rng.uniform(0.2, 0.8)))
+
+
+@dataclasses.dataclass
+class PoolStats:
+    messages: int = 0
+    work_received: int = 0
+    results_reported: int = 0
+    no_work: int = 0
+    failed: int = 0                   # results lost to vanishing hosts
+    corrupted: int = 0                # malicious lanes evaluated
+    eval_batches: int = 0
+    evals: int = 0
+    resumed_leases: int = 0           # in-flight work rebuilt after restore
+    sim_time: float = 0.0
+
+
+@dataclasses.dataclass
+class _InFlight:
+    search: int
+    wu: int
+    point: np.ndarray
+    issued_at: float
+
+
+class SimClientPool:
+    """Deterministic virtual-time client fleet over one connection."""
+
+    def __init__(self, cfg: GridConfig, backend: EvalBackend,
+                 max_messages: Optional[int] = None):
+        self.cfg = cfg
+        self.backend = backend
+        self.max_messages = max_messages
+        self.speeds, self.malicious, _ = sample_hosts(cfg)
+        online_rng = np.random.default_rng(
+            np.random.SeedSequence((_ONLINE_SALT, cfg.seed)))
+        self.online = online_rng.uniform(0, cfg.base_eval_time / 10,
+                                         cfg.n_hosts)
+        self.stats = PoolStats()
+        self._events: List[Tuple[float, int, int]] = []
+        self._inflight: Dict[int, _InFlight] = {}
+        self._ycache: Dict[Tuple[int, int], float] = {}
+        self._registered: set = set()
+        self._stopped: set = set()
+        self._seeded = False          # resume_from pre-seeded the schedule
+
+    # -- crash-restore rebuild ----------------------------------------------
+
+    def resume_from(self, world: dict) -> None:
+        """Rebuild the event schedule from a restored server's
+        ``world_view()``: leased hosts resume their in-flight computation
+        (completion or vanish-retry at the deterministic per-(host, wu)
+        time), idle hosts re-contact at ``next_contact_at``, and hosts
+        the run never saw come online on their original stagger."""
+        leased = set()
+        for l in world["leases"] + world["lapsed"]:
+            h, wu = int(l["host_id"]), int(l["wu"])
+            if h in leased:           # server keeps ≤ 1 lease per host
+                continue
+            leased.add(h)
+            self._registered.add(h)
+            noise, loss, _ = _wu_draws(self.cfg.seed, h, wu)
+            dt = self.cfg.base_eval_time / self.speeds[h] * noise
+            t0 = float(l["issued_at"])
+            if loss < self.cfg.failure_prob:
+                self.stats.failed += 1
+                heapq.heappush(self._events, (t0 + 4 * dt, PRIO_REQUEST, h))
+            else:
+                self._inflight[h] = _InFlight(
+                    int(l["search"]), wu,
+                    np.asarray(l["point"], np.float64), t0)
+                heapq.heappush(self._events, (t0 + dt, PRIO_COMPLETE, h))
+            self.stats.resumed_leases += 1
+        for rec in world["hosts"]:
+            h = int(rec["host_id"])
+            if h in leased or rec["next_contact_at"] is None:
+                continue
+            self._registered.add(h)
+            heapq.heappush(self._events,
+                           (float(rec["next_contact_at"]), PRIO_REQUEST, h))
+        known = leased | self._registered
+        for h in range(self.cfg.n_hosts):
+            if h not in known:
+                heapq.heappush(self._events,
+                               (float(self.online[h]), PRIO_REQUEST, h))
+        self._seeded = True
+
+    # -- evaluation ----------------------------------------------------------
+
+    def _value(self, search: int, wu: int) -> float:
+        key = (search, wu)
+        y = self._ycache.pop(key, None)
+        if y is not None:
+            return y
+        # lazily batch every in-flight unknown into ONE backend bucket;
+        # row-independence (the repo-wide width-invariance contract) means
+        # batch composition cannot change any lane's value
+        todo = sorted((inf.search, inf.wu, h)
+                      for h, inf in self._inflight.items()
+                      if (inf.search, inf.wu) not in self._ycache)
+        pts = np.stack([self._inflight[h].point for _, _, h in todo])
+        mal_u = np.full(len(todo), np.nan)
+        for i, (_, w, h) in enumerate(todo):
+            if self.malicious[h]:
+                mal_u[i] = _wu_draws(self.cfg.seed, h, w)[2]
+                self.stats.corrupted += 1
+        ys = self.backend(pts, mal_u)
+        self.stats.eval_batches += 1
+        self.stats.evals += len(todo)
+        for (s, w, _), yv in zip(todo, ys):
+            self._ycache[(s, w)] = float(yv)
+        return self._ycache.pop(key)
+
+    # -- the virtual-time loop ----------------------------------------------
+
+    def _call(self, conn, msg: dict) -> dict:
+        if self.max_messages is not None and \
+                self.stats.messages >= self.max_messages:
+            raise SimulatedCrash(
+                f"simulated crash after {self.stats.messages} messages")
+        self.stats.messages += 1
+        return conn.call(msg)
+
+    def run(self, conn) -> PoolStats:
+        cfg = self.cfg
+        if not self._seeded:
+            for h in range(cfg.n_hosts):
+                heapq.heappush(self._events,
+                               (float(self.online[h]), PRIO_REQUEST, h))
+        done = False
+        while self._events and not done:
+            t, prio, h = heapq.heappop(self._events)
+            if h in self._stopped:
+                continue
+            self.stats.sim_time = max(self.stats.sim_time, t)
+            if prio == PRIO_REQUEST:
+                if h not in self._registered:
+                    self._call(conn, protocol.register(h, t))
+                    self._registered.add(h)
+                rep = self._call(conn, protocol.request_work(h, t))
+                if rep["kind"] == "work":
+                    self.stats.work_received += 1
+                    wu = int(rep["wu"])
+                    noise, loss, _ = _wu_draws(cfg.seed, h, wu)
+                    dt = cfg.base_eval_time / self.speeds[h] * noise
+                    if loss < cfg.failure_prob:
+                        # the host vanishes with the result and re-requests
+                        # much later — the server only ever sees silence
+                        self.stats.failed += 1
+                        heapq.heappush(self._events,
+                                       (t + 4 * dt, PRIO_REQUEST, h))
+                    else:
+                        self._inflight[h] = _InFlight(
+                            int(rep["search"]), wu,
+                            np.asarray(rep["point"], np.float64), t)
+                        heapq.heappush(self._events,
+                                       (t + dt, PRIO_COMPLETE, h))
+                else:                 # no_work (or done)
+                    self.stats.no_work += 1
+                    if rep.get("done"):
+                        self._stopped.add(h)
+                    else:
+                        heapq.heappush(
+                            self._events,
+                            (t + float(rep["retry_after"]), PRIO_REQUEST, h))
+            else:                     # PRIO_COMPLETE
+                inf = self._inflight[h]
+                y = self._value(inf.search, inf.wu)  # batches all in-flight
+                del self._inflight[h]
+                rep = self._call(conn, protocol.report_result(
+                    h, inf.search, inf.wu, y, t))
+                self.stats.results_reported += 1
+                if rep.get("done"):
+                    done = True       # engines sealed; drain and stop
+                else:
+                    heapq.heappush(self._events, (t, PRIO_REQUEST, h))
+        return self.stats
+
+
+@dataclasses.dataclass
+class ServerRunResult:
+    server: WorkServer
+    pool: PoolStats
+    resumed: bool = False
+    replayed: int = 0                 # log records re-handled at recovery
+    recovered_done: bool = False      # nothing left to do after restore
+
+    @property
+    def engines(self):
+        return self.server.engines
+
+
+class ServerSubstrate:
+    """Run one search (or a portfolio) end-to-end through the work server:
+    the BOINC bridge built on the engine's generate/assimilate seam
+    (DESIGN.md §1/§9), exercised by the simulated client fleet over a real
+    transport.  With ``ckpt_dir`` set the run is crash-recoverable: pass
+    ``resume=True`` to continue a killed run from its snapshot + replay
+    log."""
+
+    def __init__(self, specs, fleet: GridConfig, backend: EvalBackend, *,
+                 transport: str = "loopback", policy: str = "fixed",
+                 kill_margin: float = 0.5, probation_iterations: int = 2,
+                 ckpt_dir: Optional[str] = None, snapshot_every: int = 500,
+                 lease_timeout: Optional[float] = None,
+                 max_messages: Optional[int] = None,
+                 throttle_s: float = 0.0, warm: bool = True):
+        self.specs = [specs] if isinstance(specs, SearchSpec) else list(specs)
+        self.fleet = fleet
+        self.backend = backend
+        self.transport_name = transport
+        self.policy = policy
+        self.kill_margin = kill_margin
+        self.probation_iterations = probation_iterations
+        self.ckpt_dir = ckpt_dir
+        self.snapshot_every = snapshot_every
+        self.lease_timeout = (8.0 * fleet.base_eval_time
+                              if lease_timeout is None else lease_timeout)
+        self.max_messages = max_messages
+        self.throttle_s = throttle_s
+        if warm:
+            # in-flight unknowns are bounded by the fleet (≤ 1 lease per
+            # host), so warming the ladder to n_hosts guarantees zero
+            # compiles once the run starts
+            self.backend.warm(len(np.asarray(self.specs[0].x0)),
+                              fleet.n_hosts)
+
+    def _build_server(self) -> WorkServer:
+        return WorkServer(self.specs, policy=self.policy,
+                          kill_margin=self.kill_margin,
+                          probation_iterations=self.probation_iterations,
+                          lease_timeout=self.lease_timeout,
+                          idle_retry=self.fleet.idle_retry)
+
+    def run(self, resume: bool = False) -> ServerRunResult:
+        replayed = 0
+        mgr = None
+        if resume:
+            if self.ckpt_dir is None:
+                raise ValueError("resume=True needs a ckpt_dir")
+            server, mgr, replayed = CheckpointManager.recover(
+                self.ckpt_dir, self._build_server,
+                snapshot_every=self.snapshot_every)
+        else:
+            server = self._build_server()
+            if self.ckpt_dir is not None:
+                mgr = CheckpointManager(self.ckpt_dir,
+                                        snapshot_every=self.snapshot_every)
+        recovered_done = server.done
+        if mgr is None:
+            handler = server.handle
+        else:
+            def handler(msg, _mgr=mgr, _srv=server):
+                rep = _srv.handle(msg)
+                _mgr.record(msg, _srv)
+                if self.throttle_s:
+                    time.sleep(self.throttle_s)
+                return rep
+        transport = make_transport(self.transport_name)
+        transport.start(handler)
+        pool = SimClientPool(self.fleet, self.backend,
+                             max_messages=self.max_messages)
+        if resume:
+            pool.resume_from(server.world_view())
+        conn = transport.connect()
+        try:
+            pool.run(conn)
+        finally:
+            conn.close()
+            transport.stop()
+            if mgr is not None:
+                mgr.close()
+        return ServerRunResult(server=server, pool=pool.stats,
+                               resumed=resume, replayed=replayed,
+                               recovered_done=recovered_done)
+
+
+# -- the seeded smoke problem + CLI (dryrun's kill/restore subprocess) --------
+
+def smoke_problem(n_stars: int = 400, n_hosts: int = 192, m: int = 24,
+                  iterations: int = 4, engine_seed: int = 7,
+                  grid_seed: int = 9, failure: float = 0.05,
+                  malicious: float = 0.02, quorum: int = 2):
+    """The fixed seeded workload every kill/restore gate compares across
+    runs: (spec, fleet, f_batch).  Parameters ARE the identity — the
+    dryrun harness passes the same values to every subprocess."""
+    from repro.core.anm import AnmConfig
+    from repro.data import sdss
+
+    stripe = sdss.make_stripe("server_smoke", n_stars=n_stars, seed=23)
+    f_batch, _ = sdss.make_fitness(stripe)
+    rng = np.random.default_rng(3)
+    x0 = np.clip(stripe.truth + rng.normal(0, 0.2, 8).astype(np.float32),
+                 sdss.LO, sdss.HI)
+    fleet = GridConfig(n_hosts=n_hosts, failure_prob=failure,
+                       malicious_prob=malicious, seed=grid_seed)
+    spec = SearchSpec(
+        name="server_smoke", x0=np.asarray(x0, np.float64),
+        lo=np.asarray(sdss.LO, np.float64),
+        hi=np.asarray(sdss.HI, np.float64),
+        step=np.asarray(sdss.DEFAULT_STEP, np.float64),
+        anm=AnmConfig(m_regression=m, m_line_search=m,
+                      max_iterations=iterations),
+        grid=fleet, engine_seed=engine_seed, validation_quorum=quorum)
+    return spec, fleet, f_batch
+
+
+def result_doc(res: ServerRunResult) -> dict:
+    """JSON-able run outcome: the full committed trajectory + stats, the
+    exact objects the kill/restore gates compare bit-for-bit (float64
+    round-trips exactly through JSON)."""
+    eng = res.server.engines[0]
+    return {
+        "resumed": res.resumed, "replayed": res.replayed,
+        "recovered_done": res.recovered_done,
+        "iteration": eng.iteration,
+        "best_fitness": eng.best_fitness,
+        "history": {
+            "centers": [r.center.tolist() for r in eng.history],
+            "best_fitness": [r.best_fitness for r in eng.history],
+            "best_alpha": [r.best_alpha for r in eng.history],
+            "evals_used": [r.evals_used for r in eng.history],
+        },
+        "engine_stats": dataclasses.asdict(eng.stats),
+        "counters": dataclasses.asdict(res.server.counters),
+        "registry": res.server.registry.summary(),
+        "pool": dataclasses.asdict(res.pool),
+    }
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    import argparse
+    import json
+    import os
+
+    ap = argparse.ArgumentParser(
+        description="seeded single-search server smoke (the dryrun "
+                    "kill/restore subprocess)")
+    ap.add_argument("--transport", default="loopback",
+                    choices=["loopback", "tcp"])
+    ap.add_argument("--backend", default="in_process",
+                    choices=["in_process", "pod_mesh"])
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--out", default=None, help="result JSON path")
+    ap.add_argument("--n-hosts", type=int, default=192)
+    ap.add_argument("--n-stars", type=int, default=400)
+    ap.add_argument("--m", type=int, default=24)
+    ap.add_argument("--iterations", type=int, default=4)
+    ap.add_argument("--engine-seed", type=int, default=7)
+    ap.add_argument("--grid-seed", type=int, default=9)
+    ap.add_argument("--failure", type=float, default=0.05)
+    ap.add_argument("--malicious", type=float, default=0.02)
+    ap.add_argument("--snapshot-every", type=int, default=250)
+    ap.add_argument("--throttle-s", type=float, default=0.0,
+                    help="wall-clock sleep per handled message (widens the "
+                         "SIGKILL window; virtual time is unaffected, so "
+                         "the trajectory is identical)")
+    args = ap.parse_args(argv)
+
+    spec, fleet, f_batch = smoke_problem(
+        n_stars=args.n_stars, n_hosts=args.n_hosts, m=args.m,
+        iterations=args.iterations, engine_seed=args.engine_seed,
+        grid_seed=args.grid_seed, failure=args.failure,
+        malicious=args.malicious)
+    if args.backend == "pod_mesh":
+        from repro.core.substrates.pod_mesh import PodMeshEvalBackend
+        backend = PodMeshEvalBackend(f_batch)
+    else:
+        from repro.core.substrates.eval_backend import InProcessEvalBackend
+        backend = InProcessEvalBackend(f_batch)
+    sub = ServerSubstrate(spec, fleet, backend, transport=args.transport,
+                          ckpt_dir=args.ckpt_dir,
+                          snapshot_every=args.snapshot_every,
+                          throttle_s=args.throttle_s)
+    res = sub.run(resume=args.resume)
+    doc = result_doc(res)
+    doc["transport"] = args.transport
+    doc["backend"] = args.backend
+    if args.out:
+        os.makedirs(os.path.dirname(os.path.abspath(args.out)),
+                    exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(doc, f, indent=2)
+    print(f"[server.sim] transport={args.transport} backend={args.backend} "
+          f"resumed={res.resumed} replayed={res.replayed} "
+          f"iters={doc['iteration']} best={doc['best_fitness']:.6f} "
+          f"messages={doc['pool']['messages']}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

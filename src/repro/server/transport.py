@@ -1,0 +1,210 @@
+"""Transports for the work server: in-process loopback and TCP sockets.
+
+Both speak the same framed protocol (``protocol.frame`` + codec byte), and
+both present the same two-sided API::
+
+    transport.start(handler)      # handler: dict message -> dict reply
+    conn = transport.connect()    # client side
+    reply = conn.call(msg)        # one request/reply round-trip
+    conn.close(); transport.stop()
+
+**Loopback** round-trips every message through real ``encode``/``decode``
+bytes (so serialization bugs cannot hide behind in-process object passing)
+but stays single-threaded and allocation-cheap — the deterministic
+transport the tests, dryrun smoke and benchmarks drive.
+
+**TCP** runs an asyncio server on a background thread; each connection is
+served frame-by-frame in arrival order.  Determinism over TCP comes from
+the CLIENT, not the transport: the simulated client pool issues one
+request at a time and waits for the reply, so the server observes a total
+order identical to loopback.  (Nothing stops a real deployment from
+running many concurrent volunteer connections — frames interleave at
+message granularity and the handler remains single-threaded inside the
+asyncio loop — but then message order, and hence the trajectory, is up to
+the network, exactly like a real BOINC server.)
+"""
+from __future__ import annotations
+
+import asyncio
+import socket
+import struct
+import threading
+from typing import Callable, Optional
+
+from repro.server.protocol import (DEFAULT_CODEC, FrameDecoder, ProtocolError,
+                                   decode_message, encode_message,
+                                   error_reply, frame)
+
+Handler = Callable[[dict], dict]
+_LEN = struct.Struct(">I")
+
+
+class LoopbackConnection:
+    def __init__(self, handler: Handler, codec: int):
+        self._handler = handler
+        self._codec = codec
+        self.calls = 0
+
+    def call(self, msg: dict) -> dict:
+        self.calls += 1
+        req = decode_message(frame(encode_message(msg, self._codec))[4:])
+        rep = self._handler(req)
+        return decode_message(encode_message(rep, self._codec))
+
+    def close(self) -> None:
+        pass
+
+
+class LoopbackTransport:
+    name = "loopback"
+
+    def __init__(self, codec: int = DEFAULT_CODEC):
+        self.codec = codec
+        self._handler: Optional[Handler] = None
+
+    def start(self, handler: Handler) -> "LoopbackTransport":
+        self._handler = handler
+        return self
+
+    def connect(self) -> LoopbackConnection:
+        if self._handler is None:
+            raise RuntimeError("transport not started")
+        return LoopbackConnection(self._handler, self.codec)
+
+    def stop(self) -> None:
+        self._handler = None
+
+
+class TcpConnection:
+    """Blocking request/reply client over one TCP socket."""
+
+    def __init__(self, host: str, port: int, codec: int = DEFAULT_CODEC,
+                 timeout: float = 60.0):
+        self._sock = socket.create_connection((host, port), timeout=timeout)
+        self._sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        self._codec = codec
+        self.calls = 0
+
+    def _read_exactly(self, n: int) -> bytes:
+        buf = bytearray()
+        while len(buf) < n:
+            chunk = self._sock.recv(n - len(buf))
+            if not chunk:
+                raise ConnectionError("server closed the connection")
+            buf.extend(chunk)
+        return bytes(buf)
+
+    def call(self, msg: dict) -> dict:
+        self.calls += 1
+        self._sock.sendall(frame(encode_message(msg, self._codec)))
+        (n,) = _LEN.unpack(self._read_exactly(4))
+        return decode_message(self._read_exactly(n))
+
+    def close(self) -> None:
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+
+
+class TcpTransport:
+    """asyncio TCP server on a background thread; handler runs inside the
+    loop thread, one frame at a time per connection."""
+
+    name = "tcp"
+
+    def __init__(self, host: str = "127.0.0.1", port: int = 0,
+                 codec: int = DEFAULT_CODEC):
+        self.host = host
+        self.port = port                  # 0: ephemeral, resolved by start()
+        self.codec = codec
+        self._loop: Optional[asyncio.AbstractEventLoop] = None
+        self._thread: Optional[threading.Thread] = None
+        self._server = None
+        self._started = threading.Event()
+        self._start_error: Optional[BaseException] = None
+
+    def start(self, handler: Handler) -> "TcpTransport":
+        async def serve_connection(reader, writer):
+            dec = FrameDecoder()
+            try:
+                while True:
+                    data = await reader.read(65536)
+                    if not data:
+                        break
+                    for payload in dec.feed(data):
+                        try:
+                            rep = handler(decode_message(payload))
+                        except ProtocolError as e:
+                            rep = error_reply(str(e))
+                        except Exception as e:  # noqa: BLE001 — a bad
+                            # frame from an untrusted client (well-formed
+                            # but missing fields, say) must produce an
+                            # error REPLY, not a dead connection the
+                            # client only discovers at its socket timeout
+                            rep = error_reply(
+                                f"{type(e).__name__}: {e}")
+                        writer.write(frame(encode_message(rep, self.codec)))
+                    await writer.drain()
+            except (ConnectionError, asyncio.IncompleteReadError):
+                pass
+            finally:
+                try:
+                    writer.close()
+                except Exception:
+                    pass
+
+        async def main():
+            self._server = await asyncio.start_server(
+                serve_connection, self.host, self.port)
+            self.port = self._server.sockets[0].getsockname()[1]
+            self._started.set()
+            async with self._server:
+                await self._server.serve_forever()
+
+        def run():
+            self._loop = asyncio.new_event_loop()
+            asyncio.set_event_loop(self._loop)
+            try:
+                self._loop.run_until_complete(main())
+            except asyncio.CancelledError:
+                pass
+            except BaseException as e:      # surface bind errors to start()
+                self._start_error = e
+                self._started.set()
+            finally:
+                self._loop.close()
+
+        self._thread = threading.Thread(target=run, daemon=True,
+                                        name="fgdo-tcp-server")
+        self._thread.start()
+        self._started.wait(timeout=30.0)
+        if self._start_error is not None:
+            raise RuntimeError(
+                f"TCP transport failed to start: {self._start_error}")
+        if not self._started.is_set():
+            raise RuntimeError("TCP transport failed to start (timeout)")
+        return self
+
+    def connect(self) -> TcpConnection:
+        return TcpConnection(self.host, self.port, self.codec)
+
+    def stop(self) -> None:
+        if self._loop is not None and self._loop.is_running():
+            def shutdown():
+                for task in asyncio.all_tasks(self._loop):
+                    task.cancel()
+            self._loop.call_soon_threadsafe(shutdown)
+        if self._thread is not None:
+            self._thread.join(timeout=10.0)
+        self._loop = None
+        self._thread = None
+
+
+def make_transport(name: str, **kwargs):
+    """The transport registry: ``loopback`` or ``tcp``."""
+    if name == "loopback":
+        return LoopbackTransport(**kwargs)
+    if name == "tcp":
+        return TcpTransport(**kwargs)
+    raise ValueError(f"unknown transport {name!r} (loopback|tcp)")

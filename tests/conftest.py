@@ -16,3 +16,7 @@ def pytest_configure(config):
         "markers", "orchestrator: tier-1 multi-search orchestrator tests "
                    "(run in CI's cached-venv tier-1 job; select with "
                    "-m orchestrator)")
+    config.addinivalue_line(
+        "markers", "server: tier-1 service-layer tests (wire protocol, "
+                   "host registry, crash-recoverable work server; CI's "
+                   "server-smoke job selects them with -m server)")

@@ -118,6 +118,49 @@ def test_malicious_best_rejected():
     assert server.history[-1].best_fitness > -100.0
 
 
+def test_new_host_cold_start_grace():
+    """The return-rate gate must NOT exclude a brand-new host: with 1
+    issued / 0 returned it sits at a 0% return rate it never had a chance
+    to improve, so the gate only engages after ``min_issued_for_rate``
+    (default 4) issues.  Regression pin for the reliable-host cold start:
+    below the threshold the host keeps receiving work (validation work
+    included), at the threshold with nothing returned it stops."""
+    def f(x):
+        return float(np.sum(np.asarray(x) ** 2))
+
+    server = FgdoAnmServer(x0=np.ones(2), lo=-5 * np.ones(2),
+                           hi=5 * np.ones(2), step=0.3 * np.ones(2),
+                           cfg=AnmConfig(m_regression=30, m_line_search=30,
+                                         max_iterations=1),
+                           seed=1, validation_quorum=2)
+    now = 0.0
+    worker, rookie, blackhole = 1, 42, 66
+    # drive to the LINE-SEARCH validation (the bootstrap probe has its own
+    # earlier quorum round, during which the rookies aren't fed yet)
+    while not (server.validating and not server.engine.bootstrapping):
+        # the rookie picks up 3 workunits it hasn't returned YET; the
+        # black hole grabs 5 and will never return any
+        if server.phase in ("regression", "linesearch"):
+            if server._host_issued.get(rookie, 0) < 3:
+                server.generate_work(rookie, now)
+            if server._host_issued.get(blackhole, 0) < 5:
+                server.generate_work(blackhole, now)
+        wu = server.generate_work(worker, now)
+        if wu is not None:
+            server.assimilate(wu, f(wu.point), worker, now + 1.0)
+        now += 1
+    assert server._host_issued[rookie] == 3
+    assert server._host_returned.get(rookie, 0) == 0
+    assert server._host_issued[blackhole] == 5
+    # 3 issued / 0 returned is INSIDE the grace window: the rookie stays
+    # eligible and actually receives a validation replica ...
+    assert server._host_returns(rookie)
+    assert server.generate_work(rookie, now) is not None
+    # ... while 5 issued / 0 returned is past it: gate engaged
+    assert not server._host_returns(blackhole)
+    assert server.generate_work(blackhole, now) is None
+
+
 def test_vanishing_fast_host_loses_reliable_status():
     """A host that takes work and never returns must stop receiving
     latency-critical validation replicas.  Turnaround tracking alone is
