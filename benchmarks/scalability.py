@@ -490,6 +490,146 @@ def _server_shootout(n_hosts: int, n_stars: int, m: int, iters: int):
             wall_srv / max(wall_bt, 1e-9), determinism_ok)
 
 
+def _cached_portfolio_shootout(n_searches: int, n_hosts: int, m: int,
+                               tick_batch: int, iters: int):
+    """Warm eval-cache portfolio replay vs cache-off (DESIGN.md §10).
+
+    The same ``MS_SEARCHES``-way coalesced portfolio runs cache-off and
+    cache-on-warm (the cache populated by an untimed cold run, which also
+    serves as the bit-exact parity gate): the warm side re-commits the
+    identical trajectories while dispatching almost nothing — only
+    malicious lanes, which the cache refuses to serve, still touch the
+    device.  Wall-clock is best-of ``MS_REPS`` alternating reps.
+    Returns (off_row, warm_row, speedup, parity_ok)."""
+    from repro.core.substrates.eval_cache import EvalCache
+
+    # eval-bound on purpose (contrast the multi-search row's latency-bound
+    # stripe): the cache's win is evaluations NOT run, so the honest
+    # regime is one where fitness FLOPs dominate the round trip
+    stripe = sdss.make_stripe("cachedportfolio", n_stars=2_000, seed=29)
+    f_batch, _ = sdss.make_fitness(stripe)
+    rng = np.random.default_rng(3)
+    x0 = np.clip(stripe.truth + rng.normal(0, 0.2, 8).astype(np.float32),
+                 sdss.LO, sdss.HI)
+    anm_cfg = AnmConfig(m_regression=m, m_line_search=m,
+                        max_iterations=iters)
+    fleet = GridConfig(n_hosts=n_hosts, failure_prob=0.05,
+                       malicious_prob=0.01, seed=9)
+    backend = InProcessEvalBackend(f_batch)
+    sched0 = FleetScheduler(backend, fleet, tick_batch=tick_batch)
+    specs = multi_start_specs(sched0, x0, sdss.LO, sdss.HI,
+                              sdss.DEFAULT_STEP, anm_cfg, n_searches,
+                              seed=7, jitter=0.3)
+    sched0.warm(len(x0), specs)
+
+    def run_portfolio(cache):
+        sched = FleetScheduler(backend, fleet, tick_batch=tick_batch,
+                               cache=cache)
+        director = SearchDirector(sched, specs)
+        t0 = time.perf_counter()
+        res = director.run()
+        return res, time.perf_counter() - t0
+
+    cache = EvalCache(fingerprint="bench/cached_portfolio")
+    run_portfolio(None)                        # warm every shared jit
+    cold, _ = run_portfolio(cache)             # populate; parity witness
+    t_off, t_warm = [], []
+    for _ in range(MS_REPS):                   # alternate: noise hits both
+        off, t = run_portfolio(None)           # deterministic per seed, so
+        t_off.append(t)                        # the last rep serves the
+        warm, t = run_portfolio(cache)         # rows + the parity gate
+        t_warm.append(t)
+    parity_ok = all(
+        identical_trajectories(a.engine, b.engine)
+        and a.engine.stats == b.engine.stats
+        for pair in ((off, cold), (off, warm))
+        for a, b in zip(pair[0].outcomes, pair[1].outcomes))
+    wall_off, wall_warm = min(t_off), min(t_warm)
+    cstat = cache.status()
+    off_row = {
+        "substrate": "portfolio_cache_off", "n_searches": n_searches,
+        "m": m, "tick_batch": tick_batch, "wall_s": wall_off,
+        "wall_s_reps": [round(t, 4) for t in t_off],
+        "final": [o.engine.best_fitness for o in off.outcomes],
+        "iterations": [o.engine.iteration for o in off.outcomes],
+        "parity_ok": parity_ok,
+    }
+    warm_row = {
+        "substrate": "portfolio_cache_warm", "n_searches": n_searches,
+        "m": m, "tick_batch": tick_batch, "wall_s": wall_warm,
+        "wall_s_reps": [round(t, 4) for t in t_warm],
+        "final": [o.engine.best_fitness for o in warm.outcomes],
+        "iterations": [o.engine.iteration for o in warm.outcomes],
+        "parity_ok": parity_ok,
+        "hits": cstat["hits"], "misses": cstat["misses"],
+        "lanes_saved": cstat["lanes_saved"],
+        "hit_rate": cstat["hit_rate"],
+        "store_size": cstat["store_size"],
+        "full_buckets": cstat["full_buckets"],
+        "lanes_deduped": (warm.coalesce_stats.lanes_deduped
+                          if warm.coalesce_stats else 0),
+    }
+    return off_row, warm_row, wall_off / max(wall_warm, 1e-9), parity_ok
+
+
+def _warm_restart_row(n_hosts: int, n_stars: int, m: int, iters: int):
+    """The §10 crash/recovery composition row: a checkpointed server run
+    with the JSONL-backed cache is crashed mid-search (the in-process
+    SIGKILL analog), then restored in a FRESH cache instance loaded from
+    the surviving store.  Gated on the restored trajectory being
+    bit-identical to an uninterrupted run AND the restore actually
+    serving warm hits (the re-leased in-flight points it already paid
+    for).  Returns (row, ok)."""
+    import shutil
+    import tempfile
+
+    from repro.core.substrates.eval_cache import EvalCache, JsonlCacheStore
+    from repro.server.checkpoint import eval_cache_path
+    from repro.server.sim import (ServerSubstrate, SimulatedCrash,
+                                  smoke_problem)
+
+    spec, fleet, f_batch = smoke_problem(n_stars=n_stars, n_hosts=n_hosts,
+                                         m=m, iterations=iters)
+    backend = InProcessEvalBackend(f_batch)
+    base = ServerSubstrate(spec, fleet, backend).run()
+    d = tempfile.mkdtemp(prefix="bench_warm_restart_")
+    try:
+        fp = "bench/warm_restart"
+        crashed = EvalCache(JsonlCacheStore(eval_cache_path(d)),
+                            fingerprint=fp)
+        sub = ServerSubstrate(
+            spec, fleet, backend, ckpt_dir=d, snapshot_every=100,
+            max_messages=int(0.4 * base.pool.messages), cache=crashed)
+        try:
+            sub.run()
+            return {"substrate": "warm_restart_server",
+                    "error": "run finished before the crash point"}, False
+        except SimulatedCrash:
+            pass
+        warm = EvalCache(JsonlCacheStore(eval_cache_path(d)),
+                         fingerprint=fp)
+        t0 = time.perf_counter()
+        res = ServerSubstrate(spec, fleet, backend, ckpt_dir=d,
+                              snapshot_every=100,
+                              cache=warm).run(resume=True)
+        wall = time.perf_counter() - t0
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+    eng, eng0 = res.engines[0], base.engines[0]
+    traj_ok = identical_trajectories(eng, eng0) and eng.stats == eng0.stats
+    ok = traj_ok and warm.stats.hits > 0 and len(warm.store) > 0
+    row = {
+        "substrate": "warm_restart_server", "n_hosts": n_hosts, "m": m,
+        "resume_wall_s": wall,
+        "store_size_at_restore": len(warm.store) - warm.stats.stores,
+        "resumed_leases": res.pool.resumed_leases,
+        "cache": res.cache,
+        "trajectory_equal": traj_ok,
+        "warm_after_restore": warm.stats.hits > 0,
+    }
+    return row, ok
+
+
 def run(out_dir=None, n_stars=8_000, smoke: bool = False,
         substrate: str = "all"):
     """``substrate`` filters which shootout sections run — names validated
@@ -511,7 +651,7 @@ def run(out_dir=None, n_stars=8_000, smoke: bool = False,
     os.makedirs(out_dir, exist_ok=True)
     results = {"hosts_sweep": [], "fault_sweep": [], "substrate_shootout": {},
                "pipelined_shootout": {}, "multi_search_shootout": {},
-               "server_shootout": {}}
+               "cached_portfolio_shootout": {}, "server_shootout": {}}
 
     if not smoke and substrate == "all":
         stripe = sdss.make_stripe("scal", n_stars=n_stars, seed=21)
@@ -637,6 +777,40 @@ def run(out_dir=None, n_stars=8_000, smoke: bool = False,
              f"target>={min_ms}x;serial_s={ser_row['wall_s']:.3f};"
              f"coalesced_s={co_row['wall_s']:.3f}")
 
+    # -- eval-cache rows: warm portfolio replay + warm restart (§10) ---------
+    if section("cached_portfolio"):
+        # the warm-replay gate is 1.2x in BOTH modes: serving from the
+        # memo dict must beat re-evaluating even at smoke sizes, and the
+        # full-mode fitness is costlier, so the bar only gets easier
+        if smoke:
+            cp_m, cp_iters = 128, 1
+        else:
+            cp_m, cp_iters = 256, 2
+        cp_hosts, cp_tick, min_cp = 512, 8, 1.2
+        cpo_row, cpw_row, cp_speedup, cp_parity_ok = \
+            _cached_portfolio_shootout(MS_SEARCHES, cp_hosts, cp_m,
+                                       cp_tick, cp_iters)
+        wr_row, wr_ok = _warm_restart_row(96, 400, 16, 3)
+        results["cached_portfolio_shootout"] = {
+            "n_searches": MS_SEARCHES, "fleet_hosts": cp_hosts,
+            "cache_off": cpo_row, "cache_warm": cpw_row,
+            "speedup": cp_speedup, "warm_restart": wr_row}
+        emit(f"scal_cachedportfolio_off_{MS_SEARCHES}x",
+             cpo_row["wall_s"] * 1e6,
+             f"m={cp_m};tick={cp_tick};iters={cp_iters}")
+        emit(f"scal_cachedportfolio_warm_{MS_SEARCHES}x",
+             cpw_row["wall_s"] * 1e6,
+             f"m={cp_m};hit_rate={cpw_row['hit_rate']:.2f};"
+             f"store={cpw_row['store_size']};"
+             f"parity={'ok' if cp_parity_ok else 'FAIL'}")
+        emit(f"scal_cachedportfolio_speedup_{MS_SEARCHES}x", cp_speedup,
+             f"target>={min_cp}x;off_s={cpo_row['wall_s']:.3f};"
+             f"warm_s={cpw_row['wall_s']:.3f}")
+        emit("scal_warm_restart_server", wr_row.get("resume_wall_s", 0) * 1e6,
+             f"hits={wr_row.get('cache', {}).get('hits') if wr_row.get('cache') else 0};"
+             f"resumed_leases={wr_row.get('resumed_leases')};"
+             f"{'ok' if wr_ok else 'FAIL'}")
+
     # -- server-overhead row: loopback work server (DESIGN.md §9) ------------
     if section("server"):
         # the row is DEFINED at the 1024-host smoke-shootout workload in
@@ -677,19 +851,22 @@ def run(out_dir=None, n_stars=8_000, smoke: bool = False,
             ledger = {}
         ledger["smoke" if smoke else "full"] = {
             "rows": [ev, bt, pod, sync_row, pipe_row, ser_row, co_row,
-                     srv_row],
+                     cpo_row, cpw_row, wr_row, srv_row],
             "speedups": {
                 "batched_vs_per_event": speedup,
                 "pod_sharding_overhead": pod_overhead,
                 "pod_vs_batched_m_wall_ratio": pod_econ,
                 "pipelined_vs_sync": pipe_speedup,
                 "multi_search_coalesced_vs_serial": ms_speedup,
+                "cached_portfolio_warm_vs_off": cp_speedup,
                 "server_overhead_vs_per_event": srv_overhead,
                 "server_vs_batched_wall_ratio": srv_vs_batched,
             },
             "parity": {"pod_mesh": pod_parity_ok,
                        "pipelined": pipe_parity_ok,
                        "multi_search": ms_parity_ok,
+                       "cached_portfolio": cp_parity_ok,
+                       "warm_restart": wr_ok,
                        "server_determinism": srv_det_ok},
             "platform": _platform_meta(),
         }
@@ -739,6 +916,24 @@ def run(out_dir=None, n_stars=8_000, smoke: bool = False,
                 f"{ms_speedup:.2f}x below the {min_ms}x floor (serial "
                 f"{ser_row['wall_s']:.3f}s vs coalesced "
                 f"{co_row['wall_s']:.3f}s)")
+    if section("cached_portfolio"):
+        if not cp_parity_ok:
+            raise RuntimeError(
+                "a cache-on portfolio engine diverged from its cache-off "
+                "twin at the same seed — the memo layer must serve only "
+                "bit-exact values")
+        if cp_speedup < min_cp:
+            raise RuntimeError(
+                f"warm cached portfolio {cp_speedup:.2f}x below the "
+                f"{min_cp}x floor (off {cpo_row['wall_s']:.3f}s vs warm "
+                f"{cpw_row['wall_s']:.3f}s)")
+        if not wr_ok:
+            raise RuntimeError(
+                f"crash/restore with the persistent cache failed the §10 "
+                f"gate (trajectory_equal="
+                f"{wr_row.get('trajectory_equal')}, warm_after_restore="
+                f"{wr_row.get('warm_after_restore')}) — the restored "
+                f"server must be bit-identical AND actually warm")
     if section("server"):
         if not srv_det_ok:
             raise RuntimeError(

@@ -5,10 +5,13 @@ Three acts over one seeded 8-parameter SDSS-stream search:
   1. serve it: a loopback work server (real framed protocol messages,
      host registry, deadline leases) drives a simulated 128-host volunteer
      fleet to completion, then reports the registry's view of the fleet;
-  2. crash it: the same search with checkpointing on, killed mid-run
-     (simulated crash after N messages), restored from snapshot + replay
-     log, and run to completion — the restored run must commit
-     bit-identical iterates and identical engine stats;
+  2. crash it: the same search with checkpointing AND the persistent
+     eval cache on, killed mid-run (simulated crash after N messages),
+     restored from snapshot + replay log + the surviving cache store,
+     and run to completion — the restored run must commit bit-identical
+     iterates and identical engine stats, and comes back WARM: the
+     re-leased in-flight points it already paid for are served from the
+     cache instead of re-evaluated (DESIGN.md §10);
   3. go over TCP: the identical search through real sockets on
      127.0.0.1, which must match the loopback trajectory exactly.
 
@@ -21,7 +24,9 @@ import time
 
 from repro.core.engine import identical_trajectories
 from repro.core.substrates.eval_backend import InProcessEvalBackend
+from repro.core.substrates.eval_cache import EvalCache, JsonlCacheStore
 from repro.server import protocol
+from repro.server.checkpoint import eval_cache_path
 from repro.server.sim import ServerSubstrate, SimulatedCrash, smoke_problem
 from repro.server.transport import LoopbackTransport
 
@@ -61,25 +66,38 @@ def main():
           f"{c.leases_abandoned} abandoned, {c.late_returns} late returns")
 
     if args.act in (0, 2):
-        print("== act 2: kill the server mid-search, restore, compare ==")
+        print("== act 2: kill the server mid-search, restore WARM, "
+              "compare ==")
         ckpt = tempfile.mkdtemp(prefix="fgdo_service_")
         crash_at = p.messages // 3
+        fp = "fgdo_service"
         try:
-            ServerSubstrate(spec, fleet, backend, ckpt_dir=ckpt,
-                            snapshot_every=200,
-                            max_messages=crash_at).run()
+            ServerSubstrate(
+                spec, fleet, backend, ckpt_dir=ckpt, snapshot_every=200,
+                max_messages=crash_at,
+                cache=EvalCache(JsonlCacheStore(eval_cache_path(ckpt)),
+                                fingerprint=fp)).run()
             raise RuntimeError("expected the simulated crash")
         except SimulatedCrash:
             print(f"  server 'crashed' after {crash_at} messages "
-                  f"(snapshot + replay log on disk)")
+                  f"(snapshot + replay log + cache store on disk)")
+        # a fresh cache instance, warmed purely from the surviving store
+        cache = EvalCache(JsonlCacheStore(eval_cache_path(ckpt)),
+                          fingerprint=fp)
         res = ServerSubstrate(spec, fleet, backend, ckpt_dir=ckpt,
-                              snapshot_every=200).run(resume=True)
+                              snapshot_every=200,
+                              cache=cache).run(resume=True)
         same = (identical_trajectories(eng, res.engines[0])
                 and eng.stats == res.engines[0].stats)
         print(f"  restored: replayed {res.replayed} logged messages, "
               f"re-leased {res.pool.resumed_leases} in-flight workunits")
+        cc = res.cache
+        print(f"  eval cache: {cc['hits']} hits / {cc['misses']} misses "
+              f"(hit rate {cc['hit_rate']:.2f}), {cc['lanes_saved']} "
+              f"evaluations never re-run, store {cc['store_size']} entries")
         print(f"  restored run bit-identical to uninterrupted: {same}")
         assert same, "kill/restore contract violated"
+        assert cc["hits"] > 0, "restored server should have come back warm"
 
     if args.act in (0, 3):
         print("== act 3: the same search over TCP sockets ==")

@@ -29,6 +29,7 @@ from repro.core.grid import GridConfig
 from repro.core.orchestrator import (FleetScheduler, SearchDirector,
                                      multi_start_specs)
 from repro.core.substrates.eval_backend import InProcessEvalBackend
+from repro.core.substrates.eval_cache import EvalCache
 from repro.data import sdss
 
 
@@ -114,7 +115,27 @@ def main():
         print(f"serial re-runs: {wall_ser:.2f}s wall "
               f"({wall_ser / max(wall_co, 1e-9):.2f}x the coalesced run) — "
               f"trajectories "
-              f"{'bit-identical' if parity else 'DIVERGED (BUG)'}\n")
+              f"{'bit-identical' if parity else 'DIVERGED (BUG)'}")
+
+        # -- the persistent eval cache (DESIGN.md §10): replay it warm ---
+        cache = EvalCache(fingerprint="multi_search_example")
+        SearchDirector(FleetScheduler(backend, fleet, cache=cache),
+                       specs).run()                 # cold run populates
+        t0 = time.perf_counter()
+        res_warm = SearchDirector(
+            FleetScheduler(backend, fleet, cache=cache), specs).run()
+        wall_warm = time.perf_counter() - t0
+        same = all(identical_trajectories(a.engine, b.engine)
+                   and a.engine.stats == b.engine.stats
+                   for a, b in zip(res.outcomes, res_warm.outcomes))
+        cc = cache.status()
+        print(f"warm cache replay: {wall_warm:.2f}s wall "
+              f"({wall_co / max(wall_warm, 1e-9):.1f}x the cold coalesced "
+              f"run), {cc['hits']} hits / {cc['misses']} misses "
+              f"(hit rate {cc['hit_rate']:.2f}), "
+              f"{res_warm.coalesce_stats.lanes_deduped} lanes deduped, "
+              f"store {cc['store_size']} entries; "
+              f"bit-identical: {same}\n")
 
     # -- act 2: best-of-portfolio with early kill ----------------------------
     if args.policy in ("all", "portfolio"):

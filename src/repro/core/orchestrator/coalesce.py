@@ -40,6 +40,7 @@ import numpy as np
 
 from repro.core.substrates.eval_backend import (STAGING_RING, EvalBackend,
                                                 bucket_size)
+from repro.core.substrates.eval_cache import canonical_block
 
 
 @dataclasses.dataclass
@@ -56,13 +57,17 @@ class CoalesceStats:
     solo_padded_lanes: int = 0        # width the same blocks would pay solo
     forced_flushes: int = 0           # rounds dispatched early by a collect
     ring_drains: int = 0              # old rounds materialized to free slots
+    lanes_deduped: int = 0            # duplicate honest lanes evaluated once
     bucket_hist: Dict[int, int] = dataclasses.field(default_factory=dict)
 
 
 class _Round:
     """One shared bucket being assembled (``handle is None``) or in flight
-    (``handle`` set, ``ys`` cached after the first collect)."""
-    __slots__ = ("pts", "mal_u", "tags", "k", "handle", "ys")
+    (``handle`` set, ``ys`` cached after the first collect).  ``src``,
+    set when intra-bucket dedup dropped duplicate lanes, maps each
+    ORIGINAL lane position to its representative's position in the
+    dispatched bucket — the fan-out plan collect applies."""
+    __slots__ = ("pts", "mal_u", "tags", "k", "handle", "ys", "src")
 
     def __init__(self):
         self.pts: List[np.ndarray] = []
@@ -71,6 +76,7 @@ class _Round:
         self.k = 0
         self.handle = None
         self.ys: Optional[np.ndarray] = None
+        self.src: Optional[np.ndarray] = None
 
 
 class LaneSlice:
@@ -123,8 +129,16 @@ class CoalescingSubmitter:
     is ever open.
     """
 
-    def __init__(self, backend: EvalBackend):
+    def __init__(self, backend: EvalBackend, dedup: bool = True):
         self.backend = backend
+        #: evaluate identical honest points coalesced from different
+        #: searches in one round ONCE, fanning the value out to every
+        #: tagged lane at collect — safe for exactly the reason serving a
+        #: bit-exact cache hit is (row independence + width invariance:
+        #: a lane's value is a pure function of its staged f32 bytes).
+        #: Malicious lanes are never deduped (their value is the per-lane
+        #: corrupted lie) and never act as representatives.
+        self.dedup = dedup
         self._open: Optional[_Round] = None
         # flushed rounds per bucket shape, submission order: K searches
         # each pipelining a few lane handles can hold MORE uncollected
@@ -171,7 +185,16 @@ class CoalescingSubmitter:
         if r is None:
             return
         self._open = None
-        kp = bucket_size(r.k, self.backend.min_bucket)
+        pts = r.pts[0] if len(r.pts) == 1 else np.concatenate(r.pts)
+        mal_u = r.mal_u[0] if len(r.mal_u) == 1 else np.concatenate(r.mal_u)
+        tags = r.tags[0] if len(r.tags) == 1 else np.concatenate(r.tags)
+        if self.dedup and r.k > 1:
+            keep = self._dedup_plan(r, pts, mal_u)
+            if keep is not None:
+                pts, mal_u, tags = pts[keep], mal_u[keep], tags[keep]
+        # ring pressure is keyed on the width actually dispatched (dedup
+        # may have shrunk the bucket below the submitted lane count)
+        kp = bucket_size(len(pts), self.backend.min_bucket)
         dq = self._inflight.setdefault(kp, collections.deque())
         # the ring is POSITIONAL (slots rotate round-robin), so the real
         # requirement is that everything older than the newest ring-2
@@ -181,17 +204,54 @@ class CoalescingSubmitter:
         while len(dq) > STAGING_RING - 2:
             old = dq.popleft()
             if old.ys is None:
-                old.ys = self.backend.collect(old.handle)
+                old.ys = self._materialize(old)
                 self.stats.ring_drains += 1
-        pts = r.pts[0] if len(r.pts) == 1 else np.concatenate(r.pts)
-        mal_u = r.mal_u[0] if len(r.mal_u) == 1 else np.concatenate(r.mal_u)
-        tags = r.tags[0] if len(r.tags) == 1 else np.concatenate(r.tags)
         r.handle = self.backend.submit(pts, mal_u, lane_tags=tags)
         dq.append(r)
         self.stats.dispatches += 1
         self.stats.padded_lanes += r.handle.kp
         self.stats.bucket_hist[r.handle.kp] = \
             self.stats.bucket_hist.get(r.handle.kp, 0) + 1
+
+    def _dedup_plan(self, r: _Round, pts: np.ndarray,
+                    mal_u: np.ndarray) -> Optional[np.ndarray]:
+        """Indices of the lanes to dispatch, or ``None`` when every lane
+        is unique.  Sets ``r.src`` (original lane -> dispatched position)
+        when duplicates were dropped.  The cheap vectorized pre-check
+        (all first coordinates distinct => no duplicates possible) keeps
+        the common all-unique round at ~one ``np.unique`` call instead of
+        a per-lane Python loop."""
+        blk = canonical_block(pts)
+        if len(np.unique(blk[:, 0])) == r.k:
+            return None
+        seen: Dict[bytes, int] = {}
+        keep: List[int] = []
+        src = np.empty(r.k, np.int64)
+        dups = 0
+        for i in range(r.k):
+            if not np.isnan(mal_u[i]):    # malicious lane: its value is
+                src[i] = len(keep)        # the per-lane lie — never dedup,
+                keep.append(i)            # never a representative
+                continue
+            key = blk[i].tobytes()
+            j = seen.get(key)
+            if j is None:
+                seen[key] = src[i] = len(keep)
+                keep.append(i)
+            else:
+                src[i] = j
+                dups += 1
+        if not dups:
+            return None
+        r.src = src
+        self.stats.lanes_deduped += dups
+        return np.asarray(keep, np.int64)
+
+    def _materialize(self, r: _Round) -> np.ndarray:
+        """Collect a dispatched round and expand the dedup fan-out back
+        to the full submitted lane order."""
+        ys = self.backend.collect(r.handle)
+        return ys if r.src is None else ys[r.src]
 
     def collect(self, lane: LaneSlice) -> np.ndarray:
         """Materialize one search's lanes.  The shared bucket is collected
@@ -206,5 +266,5 @@ class CoalescingSubmitter:
             self.stats.forced_flushes += 1
             self.flush()
         if r.ys is None:
-            r.ys = self.backend.collect(r.handle)
+            r.ys = self._materialize(r)
         return r.ys[lane.offset:lane.offset + lane.k]

@@ -28,6 +28,7 @@ from repro.core.substrates.batched_grid import (BatchedGridStats,
                                                 BatchedVolunteerGrid)
 from repro.core.substrates.eval_backend import (STAGING_RING, EvalBackend,
                                                 bucket_size)
+from repro.core.substrates.eval_cache import CachingSubmitter, EvalCache
 from repro.core.orchestrator.coalesce import CoalescingSubmitter
 
 #: spacing of derived per-slot grid seeds (a prime, so slots never collide
@@ -117,10 +118,20 @@ class FleetScheduler:
     def __init__(self, backend: EvalBackend, fleet: GridConfig, *,
                  coalesce: bool = True, pipelined: bool = True,
                  pipeline_depth: int = 4, tick_batch: Optional[int] = None,
-                 overcommit: float = 2.0, min_hosts: int = 16):
+                 overcommit: float = 2.0, min_hosts: int = 16,
+                 cache: Optional[EvalCache] = None, dedup: bool = True):
+        self.raw_backend = backend
+        # the memo layer (DESIGN.md §10) wraps the backend BELOW the
+        # coalescer, so exact-hit stripping applies to the whole shared
+        # multi-search bucket; bit-exact-only serving keeps every search
+        # on its cache-off trajectory (the §8 parity contract holds)
+        self.cache = cache
+        if cache is not None:
+            backend = CachingSubmitter(backend, cache)
         self.backend = backend
         self.fleet = fleet
-        self.coalescer = CoalescingSubmitter(backend) if coalesce else None
+        self.coalescer = (CoalescingSubmitter(backend, dedup=dedup)
+                          if coalesce else None)
         # the uncoalesced path still needs ONE cross-search guard for the
         # backend's staging rings (per-grid depth clamps don't compose)
         self.ring_guard = None if coalesce else _SharedRingGuard(backend)

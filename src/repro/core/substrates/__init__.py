@@ -13,4 +13,7 @@ the production pod mesh (``pod_mesh.PodMeshEvalBackend``).
 from repro.core.substrates.batched_grid import BatchedVolunteerGrid  # noqa: F401
 from repro.core.substrates.eval_backend import (  # noqa: F401
     EvalBackend, EvalHandle, InProcessEvalBackend)
+from repro.core.substrates.eval_cache import (  # noqa: F401
+    CacheStats, CachingSubmitter, EvalCache, JsonlCacheStore,
+    MemoryCacheStore, SqliteCacheStore)
 from repro.core.substrates.pod_mesh import PodMeshEvalBackend  # noqa: F401

@@ -410,6 +410,106 @@ def run_multi_search_smoke(out_dir: str, n_searches: int = 4, m: int = 24,
     return ok
 
 
+def run_cached_portfolio_smoke(out_dir: str, n_searches: int = 8,
+                               m: int = 24, iterations: int = 2,
+                               n_stars: int = 400,
+                               fleet_hosts: int = 512) -> bool:
+    """Eval-cache smoke (``--substrate cached_portfolio``).
+
+    An ``n_searches``-way coalesced portfolio runs three times per
+    backend (``InProcessEvalBackend`` and ``PodMeshEvalBackend`` on the
+    production mesh): cache-off, cache-on cold, and cache-on warm (same
+    cache, whole portfolio replayed).  The §10 gates:
+
+      * bit-exact parity — both cache-on runs commit bit-identical
+        iterates and identical final stats to cache-off, per search;
+      * the warm rerun is FULLY served — zero new misses, hits > 0
+        (only malicious lanes touch the device again).
+
+    Writes artifacts/dryrun/substrate_cached_portfolio.json.
+    """
+    import numpy as np
+    from repro.core.anm import AnmConfig
+    from repro.core.engine import identical_trajectories
+    from repro.core.grid import GridConfig
+    from repro.core.orchestrator import (FleetScheduler, SearchDirector,
+                                         multi_start_specs)
+    from repro.core.substrates.eval_backend import InProcessEvalBackend
+    from repro.core.substrates.eval_cache import EvalCache
+    from repro.core.substrates.pod_mesh import PodMeshEvalBackend
+    from repro.data import sdss
+
+    mesh = make_production_mesh()
+    stripe = sdss.make_stripe("cached_portfolio_smoke", n_stars=n_stars,
+                              seed=23)
+    f_batch, _ = sdss.make_fitness(stripe)
+    rng = np.random.default_rng(3)
+    x0 = np.clip(stripe.truth + rng.normal(0, 0.2, 8).astype(np.float32),
+                 sdss.LO, sdss.HI)
+    fleet = GridConfig(n_hosts=fleet_hosts, failure_prob=0.05,
+                       malicious_prob=0.01, seed=9)
+    anm = AnmConfig(m_regression=m, m_line_search=m,
+                    max_iterations=iterations)
+
+    def portfolio(backend, cache):
+        sched = FleetScheduler(backend, fleet, cache=cache)
+        specs = multi_start_specs(sched, x0, sdss.LO, sdss.HI,
+                                  sdss.DEFAULT_STEP, anm, n_searches,
+                                  seed=7, jitter=0.3)
+        t0 = time.time()
+        res = SearchDirector(sched, specs).run()
+        return res, time.time() - t0
+
+    def pairwise_identical(a, b):
+        return all(identical_trajectories(x.engine, y.engine)
+                   and x.engine.stats == y.engine.stats
+                   for x, y in zip(a.outcomes, b.outcomes))
+
+    backends = {
+        "in_process": InProcessEvalBackend(f_batch),
+        "pod_mesh": PodMeshEvalBackend(f_batch, mesh=mesh),
+    }
+    report = {"mesh": "16x16", "n_searches": n_searches,
+              "fleet_hosts": fleet_hosts, "backends": {}}
+    ok = True
+    for name, backend in backends.items():
+        off, wall_off = portfolio(backend, None)
+        cache = EvalCache(fingerprint=f"cached_portfolio/{name}")
+        cold, wall_cold = portfolio(backend, cache)
+        misses0 = cache.stats.misses
+        hits0 = cache.stats.hits
+        warm, wall_warm = portfolio(backend, cache)
+        cold_parity = pairwise_identical(off, cold)
+        warm_parity = pairwise_identical(off, warm)
+        warm_served = (cache.stats.misses == misses0
+                       and cache.stats.hits > hits0)
+        b_ok = cold_parity and warm_parity and warm_served
+        report["backends"][name] = {
+            "cold_parity": cold_parity, "warm_parity": warm_parity,
+            "warm_fully_served": warm_served,
+            "cache": cache.status(),
+            "lanes_deduped": (warm.coalesce_stats.lanes_deduped
+                              if warm.coalesce_stats else 0),
+            "wall_s": {"off": round(wall_off, 3),
+                       "cold": round(wall_cold, 3),
+                       "warm": round(wall_warm, 3)},
+        }
+        ok = ok and b_ok
+    report["parity_ok"] = ok
+    path = os.path.join(out_dir, "substrate_cached_portfolio.json")
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2)
+    rb = report["backends"]
+    ip = rb["in_process"]
+    print(f"[{'ok' if ok else 'FAIL'}] substrate cached_portfolio: "
+          f"{n_searches} searches, hit_rate "
+          f"{ip['cache']['hit_rate']:.2f}, wall off/cold/warm "
+          f"{ip['wall_s']['off']}s/{ip['wall_s']['cold']}s/"
+          f"{ip['wall_s']['warm']}s (in-process), pod warm_parity "
+          f"{rb['pod_mesh']['warm_parity']} -> {path}")
+    return ok
+
+
 def run_server_smoke(out_dir: str, n_hosts: int = 160, m: int = 24,
                      iterations: int = 4, n_stars: int = 400) -> bool:
     """Service-layer kill/restore smoke (``--substrate server``).
@@ -425,7 +525,11 @@ def run_server_smoke(out_dir: str, n_hosts: int = 160, m: int = 24,
          the parent, exercising the real partitioning;
       3. SIGKILLed mid-search on loopback, restored from snapshot +
          replay log, run to completion                    → must equal 1;
-      4. the same kill/restore over the TCP transport     → must equal 1.
+      4. the same kill/restore over the TCP transport     → must equal 1;
+      5. the same loopback kill/restore with ``--cache``  → must equal 1,
+         AND the restored process must come back WARM: its eval-cache
+         store survives the SIGKILL in the checkpoint dir and serves the
+         re-leased in-flight points (``cache.hits > 0``, DESIGN.md §10).
 
     "Equal" is the hard service-layer contract: bit-identical committed
     centers and fitness history AND identical final ``EngineStats``.
@@ -492,14 +596,19 @@ def run_server_smoke(out_dir: str, n_hosts: int = 160, m: int = 24,
             ServerSubstrate(spec, fleet, mesh_backend).run())
         mesh_ok = trajectories_equal(base, mesh_doc)
 
-        # 3+4: SIGKILL mid-search, restore, compare — both transports
+        # 3+4+5: SIGKILL mid-search, restore, compare — both transports,
+        # then loopback again with the persistent eval cache enabled
         kills = {}
-        for transport in ("loopback", "tcp"):
-            ckpt = os.path.join(tmp, f"ckpt_{transport}")
+        variants = (("loopback", "loopback", []),
+                    ("tcp", "tcp", []),
+                    ("loopback_cache", "loopback", ["--cache"]))
+        for variant, transport, cache_args in variants:
+            ckpt = os.path.join(tmp, f"ckpt_{variant}")
             proc = subprocess.Popen(
                 [sys.executable, "-m", "repro.server.sim", *spec_args,
                  "--transport", transport, "--ckpt-dir", ckpt,
-                 "--snapshot-every", "200", "--throttle-s", "0.002"],
+                 "--snapshot-every", "200", "--throttle-s", "0.002",
+                 *cache_args],
                 env=child_env, stdout=subprocess.PIPE,
                 stderr=subprocess.PIPE)
             log_path = os.path.join(ckpt, "replay.jsonl")
@@ -528,22 +637,22 @@ def run_server_smoke(out_dir: str, n_hosts: int = 160, m: int = 24,
                 time.sleep(0.02)
             if not killed_mid_run:
                 proc.kill()
-                kills[transport] = {"killed_mid_run": False, "ok": False}
+                kills[variant] = {"killed_mid_run": False, "ok": False}
                 ok = False
                 continue
-            out_path = os.path.join(tmp, f"resume_{transport}.json")
+            out_path = os.path.join(tmp, f"resume_{variant}.json")
             r = child(["--transport", transport, "--ckpt-dir", ckpt,
-                       "--resume", "--out", out_path])
+                       "--resume", "--out", out_path, *cache_args])
             if r.returncode != 0:
                 print(r.stdout + r.stderr)
-                kills[transport] = {"killed_mid_run": True, "ok": False,
-                                    "error": "resume child failed"}
+                kills[variant] = {"killed_mid_run": True, "ok": False,
+                                  "error": "resume child failed"}
                 ok = False
                 continue
             res = load(out_path)
             t_ok = (trajectories_equal(base, res)
                     and not res["recovered_done"])
-            kills[transport] = {
+            kills[variant] = {
                 "killed_mid_run": True,
                 "recovered_done": res["recovered_done"],
                 "replayed": res["replayed"],
@@ -551,6 +660,15 @@ def run_server_smoke(out_dir: str, n_hosts: int = 160, m: int = 24,
                 "trajectory_equal": trajectories_equal(base, res),
                 "ok": t_ok,
             }
+            if cache_args:
+                # the §10 warm-restore gate: the store survived the kill
+                # and the restored process actually served from it
+                warm = (res["cache"] is not None
+                        and res["cache"]["hits"] > 0
+                        and res["cache"]["store_size"] > 0)
+                kills[variant]["cache"] = res["cache"]
+                kills[variant]["warm_after_restore"] = warm
+                kills[variant]["ok"] = t_ok = t_ok and warm
             ok = ok and t_ok
         report.update({
             "baseline": {"iterations": base["iteration"],
@@ -576,7 +694,10 @@ def run_server_smoke(out_dir: str, n_hosts: int = 160, m: int = 24,
           f"backend_parity={report.get('backend_parity_ok')} "
           f"mesh_parity={report.get('production_mesh_parity_ok')} "
           f"loopback_kill={kr.get('loopback', {}).get('ok')} "
-          f"tcp_kill={kr.get('tcp', {}).get('ok')} -> {path}")
+          f"tcp_kill={kr.get('tcp', {}).get('ok')} "
+          f"cache_kill={kr.get('loopback_cache', {}).get('ok')} "
+          f"warm={kr.get('loopback_cache', {}).get('warm_after_restore')} "
+          f"-> {path}")
     return ok
 
 

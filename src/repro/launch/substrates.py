@@ -41,6 +41,12 @@ SUBSTRATES: Dict[str, SubstrateSmoke] = {
         "in-process AND pod mesh; every search bit-identical to its solo "
         "run",
         "repro.launch.dryrun:run_multi_search_smoke"),
+    "cached_portfolio": SubstrateSmoke(
+        "cached_portfolio",
+        "persistent eval cache under a coalesced portfolio, in-process "
+        "AND pod mesh: cache-on cold and warm runs bit-identical to "
+        "cache-off, warm rerun fully served (zero new misses)",
+        "repro.launch.dryrun:run_cached_portfolio_smoke"),
     "server": SubstrateSmoke(
         "server",
         "fault-tolerant work server: seeded search over loopback and TCP "

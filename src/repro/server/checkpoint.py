@@ -37,6 +37,18 @@ import numpy as np
 
 SNAP_PREFIX = "snapshot_"
 LOG_NAME = "replay.jsonl"
+#: canonical eval-cache file inside a checkpoint dir (DESIGN.md §10): the
+#: warm cross-search evaluation cache rides the same crash-recovery
+#: lifecycle as the replay log — append-only, flushed at every snapshot
+#: (see ``CheckpointManager.attach_store``), torn-tail tolerant on load
+CACHE_NAME = "eval_cache.jsonl"
+
+
+def eval_cache_path(ckpt_dir: str) -> str:
+    """Where a crash-recoverable run persists its eval cache — one
+    convention, so a ``--resume`` process finds the warm cache without
+    any extra plumbing."""
+    return os.path.join(ckpt_dir, CACHE_NAME)
 
 
 def to_jsonable(obj):
@@ -200,6 +212,17 @@ class CheckpointManager:
         self.snapshots_written = 0
         os.makedirs(ckpt_dir, exist_ok=True)
         self._log = ReplayLog(os.path.join(ckpt_dir, LOG_NAME))
+        self._stores: list = []
+
+    def attach_store(self, store) -> None:
+        """Durability composition for auxiliary append-only stores (the
+        eval cache): flushed alongside the replay log at every snapshot
+        and closed with the manager.  The cache never needs to be AHEAD
+        of the log — a lost suffix only costs re-evaluations, never
+        correctness (bit-exact serving is value-neutral) — but flushing
+        on the snapshot cadence guarantees a restored run warms from at
+        least the snapshot's cache."""
+        self._stores.append(store)
 
     def record(self, msg: dict, server) -> None:
         if msg.get("kind") in self.READ_ONLY:
@@ -211,12 +234,16 @@ class CheckpointManager:
 
     def snapshot(self, server) -> None:
         self._log.flush()             # the snapshot must never be AHEAD
+        for store in self._stores:
+            store.flush()
         save_snapshot(self.ckpt_dir, self.seq, server.state_dict(),
                       server.fingerprint(), keep=self.keep)
         self.snapshots_written += 1
 
     def close(self) -> None:
         self._log.close()
+        for store in self._stores:
+            store.close()
 
     @classmethod
     def recover(cls, ckpt_dir: str, build_server: Callable[[], "object"],

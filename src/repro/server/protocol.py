@@ -27,7 +27,10 @@ and replies (server → client)::
     work           {search, wu, phase, point, alpha, validates, deadline}
     no_work        {retry_after, done}
     ack            {done, iteration, best}
-    status         {…summary…}
+    status         {…summary…}             # incl. ``cache`` counters (hits,
+                                           # misses, lanes_saved, store_size)
+                                           # when an eval cache is attached,
+                                           # else ``cache: null`` (§10)
     error          {error}
 
 ``wu`` ids are the engine's tickets (unique per search); ``validates``

@@ -124,6 +124,15 @@ class WorkServer:
         self._next_deadline = float("inf")
         self._last_sweep = float("-inf")
         self.sweep_interval = 5.0     # virtual seconds between churn sweeps
+        self._cache_status = None     # read-only eval-cache probe (attach)
+
+    def attach_cache(self, cache) -> None:
+        """Surface an ``EvalCache``'s counters in the read-only ``status``
+        reply (DESIGN.md §10).  Observability only: the probe is NOT part
+        of ``state_dict`` — cache persistence is the store's own job
+        (checkpoint-dir composition), and status is never logged or
+        replayed, so attaching a cache cannot perturb recovery."""
+        self._cache_status = cache.status
 
     # -- introspection -------------------------------------------------------
 
@@ -352,6 +361,8 @@ class WorkServer:
             "leases": len(self.leases), "lapsed": len(self.lapsed),
             "counters": dataclasses.asdict(self.counters),
             "registry": self.registry.summary(),
+            "cache": (None if self._cache_status is None
+                      else self._cache_status()),
         }
 
     def _apply_portfolio(self) -> None:

@@ -44,6 +44,7 @@ import numpy as np
 from repro.core.grid import GridConfig, sample_hosts
 from repro.core.orchestrator.director import SearchSpec
 from repro.core.substrates.eval_backend import EvalBackend
+from repro.core.substrates.eval_cache import CachingSubmitter, EvalCache
 from repro.server import protocol
 from repro.server.checkpoint import CheckpointManager
 from repro.server.server import WorkServer
@@ -257,6 +258,7 @@ class ServerRunResult:
     resumed: bool = False
     replayed: int = 0                 # log records re-handled at recovery
     recovered_done: bool = False      # nothing left to do after restore
+    cache: Optional[dict] = None      # eval-cache counters, when enabled
 
     @property
     def engines(self):
@@ -277,10 +279,18 @@ class ServerSubstrate:
                  ckpt_dir: Optional[str] = None, snapshot_every: int = 500,
                  lease_timeout: Optional[float] = None,
                  max_messages: Optional[int] = None,
-                 throttle_s: float = 0.0, warm: bool = True):
+                 throttle_s: float = 0.0, warm: bool = True,
+                 cache: Optional[EvalCache] = None):
         self.specs = [specs] if isinstance(specs, SearchSpec) else list(specs)
         self.fleet = fleet
         self.backend = backend
+        # the memo layer (DESIGN.md §10): the client pool evaluates
+        # through it, so re-leased points after a crash-restore — and any
+        # byte-identical re-evaluation — are served instead of paid for.
+        # Bit-exact-only serving keeps the restored trajectory identical.
+        self.cache = cache
+        self.eval_backend = (backend if cache is None
+                             else CachingSubmitter(backend, cache))
         self.transport_name = transport
         self.policy = policy
         self.kill_margin = kill_margin
@@ -320,6 +330,10 @@ class ServerSubstrate:
                 mgr = CheckpointManager(self.ckpt_dir,
                                         snapshot_every=self.snapshot_every)
         recovered_done = server.done
+        if self.cache is not None:
+            server.attach_cache(self.cache)       # status counters (§10)
+            if mgr is not None:
+                mgr.attach_store(self.cache.store)
         if mgr is None:
             handler = server.handle
         else:
@@ -331,7 +345,7 @@ class ServerSubstrate:
                 return rep
         transport = make_transport(self.transport_name)
         transport.start(handler)
-        pool = SimClientPool(self.fleet, self.backend,
+        pool = SimClientPool(self.fleet, self.eval_backend,
                              max_messages=self.max_messages)
         if resume:
             pool.resume_from(server.world_view())
@@ -342,10 +356,14 @@ class ServerSubstrate:
             conn.close()
             transport.stop()
             if mgr is not None:
-                mgr.close()
+                mgr.close()               # closes attached cache stores too
+            elif self.cache is not None:
+                self.cache.store.flush()
         return ServerRunResult(server=server, pool=pool.stats,
                                resumed=resume, replayed=replayed,
-                               recovered_done=recovered_done)
+                               recovered_done=recovered_done,
+                               cache=None if self.cache is None
+                               else self.cache.status())
 
 
 # -- the seeded smoke problem + CLI (dryrun's kill/restore subprocess) --------
@@ -398,6 +416,7 @@ def result_doc(res: ServerRunResult) -> dict:
         "counters": dataclasses.asdict(res.server.counters),
         "registry": res.server.registry.summary(),
         "pool": dataclasses.asdict(res.pool),
+        "cache": res.cache,
     }
 
 
@@ -425,6 +444,10 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap.add_argument("--failure", type=float, default=0.05)
     ap.add_argument("--malicious", type=float, default=0.02)
     ap.add_argument("--snapshot-every", type=int, default=250)
+    ap.add_argument("--cache", action="store_true",
+                    help="evaluate through a persistent eval cache "
+                         "(JSONL store in --ckpt-dir, in-memory without "
+                         "one); a --resume run warms from the survivor")
     ap.add_argument("--throttle-s", type=float, default=0.0,
                     help="wall-clock sleep per handled message (widens the "
                          "SIGKILL window; virtual time is unaffected, so "
@@ -442,10 +465,23 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     else:
         from repro.core.substrates.eval_backend import InProcessEvalBackend
         backend = InProcessEvalBackend(f_batch)
+    cache = None
+    if args.cache:
+        from repro.core.substrates.eval_cache import JsonlCacheStore
+        from repro.server.checkpoint import eval_cache_path
+        # the fingerprint names the OBJECTIVE identity (stripe + fleet
+        # shape), so every process over the same smoke problem — baseline,
+        # killed, resumed — shares keys, and a different problem never
+        # collides
+        fp = (f"server_smoke/{args.n_stars}/{args.n_hosts}/{args.m}/"
+              f"{args.iterations}")
+        store = (JsonlCacheStore(eval_cache_path(args.ckpt_dir))
+                 if args.ckpt_dir else None)
+        cache = EvalCache(store, fingerprint=fp)
     sub = ServerSubstrate(spec, fleet, backend, transport=args.transport,
                           ckpt_dir=args.ckpt_dir,
                           snapshot_every=args.snapshot_every,
-                          throttle_s=args.throttle_s)
+                          throttle_s=args.throttle_s, cache=cache)
     res = sub.run(resume=args.resume)
     doc = result_doc(res)
     doc["transport"] = args.transport
@@ -455,10 +491,14 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     exist_ok=True)
         with open(args.out, "w") as f:
             json.dump(doc, f, indent=2)
+    cache_note = ""
+    if res.cache is not None:
+        cache_note = (f" cache_hits={res.cache['hits']}"
+                      f" cache_store={res.cache['store_size']}")
     print(f"[server.sim] transport={args.transport} backend={args.backend} "
           f"resumed={res.resumed} replayed={res.replayed} "
           f"iters={doc['iteration']} best={doc['best_fitness']:.6f} "
-          f"messages={doc['pool']['messages']}")
+          f"messages={doc['pool']['messages']}{cache_note}")
     return 0
 
 

@@ -20,3 +20,7 @@ def pytest_configure(config):
         "markers", "server: tier-1 service-layer tests (wire protocol, "
                    "host registry, crash-recoverable work server; CI's "
                    "server-smoke job selects them with -m server)")
+    config.addinivalue_line(
+        "markers", "cache: tier-1 eval-cache tests (bit-exact memo layer, "
+                   "key canonicalization, persistence + warm restore; "
+                   "select with -m cache)")
