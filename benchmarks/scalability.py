@@ -45,6 +45,18 @@ grid substrates driving the same ``AnmEngine`` workload:
     budget), so a wall-clock gate against it would measure message count,
     not server quality.
 
+  * NEW (DESIGN.md §11): the LM-WORKLOAD row — the same pipelined-vs-sync
+    comparison with the quadratic fitness swapped for a REAL model
+    forward + cross-entropy (``LmLossEvalBackend`` over the rwkv6 smoke
+    config, params perturbed along a k-dim subspace).  This workload is
+    FLOPs-bound, not latency-bound, so the pipelined/sync ratio is
+    reported UNGATED; the gates are the §11 contract itself — the two
+    trajectories must be bit-identical and the warmed backend must
+    compile nothing inside the timed reps.  Each row carries a
+    device-utilization stat (fraction of wall-clock the driver spent
+    blocked on device work) so the FLOPs-bound claim is checkable from
+    the ledger.
+
 Every row lands in artifacts/benchmarks/scalability.json AND in the
 repo-root ``BENCH_scalability.json`` (wall-clock rows + speedups + the
 recording platform's metadata — python/jax/numpy versions, cpu count,
@@ -87,6 +99,7 @@ MS_SEARCHES = 8                       # multi-search shootout portfolio size
 MS_REPS = 5                           # its alternating timing reps
 SRV_REPS = 3                          # server-overhead alternating reps
 SRV_MAX_OVERHEAD = 1.5                # vs the per-event FGDO baseline
+LM_REPS = 3                           # lm-workload alternating reps
 
 
 def _platform_meta():
@@ -630,14 +643,79 @@ def _warm_restart_row(n_hosts: int, n_stars: int, m: int, iters: int):
     return row, ok
 
 
+def _lm_subspace_shootout(arch: str, k: int, m: int, iters: int,
+                          n_hosts: int):
+    """Pipelined vs sync tick loop over the LM-loss workload (DESIGN.md
+    §11): every lane is a real forward + cross-entropy of the ``arch``
+    smoke config, params lifted along a k-dim subspace basis.  One
+    backend instance is constructed and warmed over the whole bucket
+    ladder up front, then shared by every run — so the timed reps also
+    serve as the zero-compile probe (``compile_count`` must not move).
+    Wall-clock is best-of ``LM_REPS`` alternating reps.  Unlike the sdss
+    rows this workload is FLOPs-bound (each lane is a model forward), so
+    the pipelined/sync ratio is reported, not gated; the per-row
+    ``device_utilization`` (driver time blocked on device work / wall)
+    makes that regime visible in the ledger.  Returns (sync_row,
+    pipelined_row, ratio, parity_ok, zero_compiles_ok)."""
+    from repro.core.substrates.lm_loss import LmLossEvalBackend
+    from repro.server.sim import lm_problem
+
+    spec, fleet, wl = lm_problem(arch=arch, k=k, n_hosts=n_hosts, m=m,
+                                 iterations=iters)
+    backend = LmLossEvalBackend(
+        wl, n_dims=k,
+        max_bucket=bucket_size(BatchedVolunteerGrid.warm_max_bucket(m)))
+    warmed_compiles = backend.compile_count
+
+    def run_grid(pipelined: bool):
+        engine = spec.build_engine()
+        grid = BatchedVolunteerGrid(None, fleet, backend=backend,
+                                    pipelined=pipelined)
+        t0 = time.perf_counter()
+        stats = grid.run(engine)
+        return engine, stats, time.perf_counter() - t0
+
+    run_grid(True), run_grid(False)            # warm the engine-side jits
+    t_sync, t_pipe = [], []
+    for _ in range(LM_REPS):                   # alternate: noise hits both
+        e_sync, s_sync, t = run_grid(False)    # deterministic per seed, so
+        t_sync.append(t)                       # the last rep's engine/stats
+        e_pipe, s_pipe, t = run_grid(True)     # serve the rows + parity
+        t_pipe.append(t)
+    parity_ok = identical_trajectories(e_sync, e_pipe)
+    zero_compiles_ok = backend.compile_count == warmed_compiles
+    wall_sync, wall_pipe = min(t_sync), min(t_pipe)
+
+    def row(substrate, engine, stats, wall, reps):
+        # utilization pairs the LAST rep's stats with the LAST rep's wall
+        # (best-of wall is a different rep; mixing them would lie)
+        return {"substrate": substrate, "arch": arch, "k": k, "m": m,
+                "n_params": wl.proj.n_params, "wall_s": wall,
+                "wall_s_reps": [round(t, 4) for t in reps],
+                "device_utilization": round(
+                    min(stats.device_blocked_s / max(reps[-1], 1e-9), 1.0),
+                    4),
+                "final": engine.best_fitness,
+                "iterations": engine.iteration,
+                "completed": stats.completed, "parity_ok": parity_ok,
+                "compiles_after_warm":
+                    backend.compile_count - warmed_compiles,
+                **_grid_stats_row(stats)}
+
+    return (row("lm_subspace_sync", e_sync, s_sync, wall_sync, t_sync),
+            row("lm_subspace_pipelined", e_pipe, s_pipe, wall_pipe, t_pipe),
+            wall_sync / max(wall_pipe, 1e-9), parity_ok, zero_compiles_ok)
+
+
 def run(out_dir=None, n_stars=8_000, smoke: bool = False,
         substrate: str = "all"):
     """``substrate`` filters which shootout sections run — names validated
     against the SAME registry dict as ``repro.launch.dryrun --substrate``
     (``repro/launch/substrates.py``): ``pod_mesh`` → the substrate
     shootout, ``multi_search`` → the orchestrator shootout, ``server`` →
-    the server-overhead row; ``all`` (default, what CI runs) runs every
-    section and is the only mode that refreshes the perf ledger."""
+    the server-overhead row, ``lm_subspace`` → the LM-workload row;
+    ``all`` (default, what CI runs) runs every section and is the only
+    mode that refreshes the perf ledger."""
     from repro.launch.substrates import SUBSTRATES
 
     if substrate != "all" and substrate not in SUBSTRATES:
@@ -651,7 +729,8 @@ def run(out_dir=None, n_stars=8_000, smoke: bool = False,
     os.makedirs(out_dir, exist_ok=True)
     results = {"hosts_sweep": [], "fault_sweep": [], "substrate_shootout": {},
                "pipelined_shootout": {}, "multi_search_shootout": {},
-               "cached_portfolio_shootout": {}, "server_shootout": {}}
+               "cached_portfolio_shootout": {}, "server_shootout": {},
+               "lm_subspace_shootout": {}}
 
     if not smoke and substrate == "all":
         stripe = sdss.make_stripe("scal", n_stars=n_stars, seed=21)
@@ -835,6 +914,31 @@ def run(out_dir=None, n_stars=8_000, smoke: bool = False,
              f"info_only;server_s={srv_row['wall_s']:.3f};"
              f"batched_s={sv_bt['wall_s']:.3f}")
 
+    # -- LM-loss workload: the model stack as the fitness (DESIGN.md §11) ----
+    if section("lm_subspace"):
+        # smoke matches the CI dryrun scale; full matches examples/anm_lm.py
+        if smoke:
+            lm_k, lm_m, lm_iters, lm_hosts = 4, 8, 1, 32
+        else:
+            lm_k, lm_m, lm_iters, lm_hosts = 6, 12, 2, 48
+        lm_arch = "rwkv6-7b"
+        lm_sync, lm_pipe, lm_ratio, lm_parity_ok, lm_compiles_ok = \
+            _lm_subspace_shootout(lm_arch, lm_k, lm_m, lm_iters, lm_hosts)
+        results["lm_subspace_shootout"] = {
+            "arch": lm_arch, "n_hosts": lm_hosts, "sync": lm_sync,
+            "pipelined": lm_pipe, "pipelined_vs_sync_ratio": lm_ratio}
+        emit(f"scal_lm_sync_{lm_arch}", lm_sync["wall_s"] * 1e6,
+             f"k={lm_k};m={lm_m};params={lm_sync['n_params']};"
+             f"dev_util={lm_sync['device_utilization']:.2f}")
+        emit(f"scal_lm_pipelined_{lm_arch}", lm_pipe["wall_s"] * 1e6,
+             f"k={lm_k};m={lm_m};"
+             f"dev_util={lm_pipe['device_utilization']:.2f};"
+             f"compiles={lm_pipe['compiles_after_warm']};"
+             f"parity={'ok' if lm_parity_ok else 'FAIL'}")
+        emit(f"scal_lm_pipelined_ratio_{lm_arch}", lm_ratio,
+             f"info_only_flops_bound;sync_s={lm_sync['wall_s']:.3f};"
+             f"pipe_s={lm_pipe['wall_s']:.3f}")
+
     with open(os.path.join(out_dir, "scalability.json"), "w") as f:
         json.dump(results, f, indent=2)
     # repo-root perf ledger: the wall-clock rows + speedups only, one file
@@ -851,7 +955,7 @@ def run(out_dir=None, n_stars=8_000, smoke: bool = False,
             ledger = {}
         ledger["smoke" if smoke else "full"] = {
             "rows": [ev, bt, pod, sync_row, pipe_row, ser_row, co_row,
-                     cpo_row, cpw_row, wr_row, srv_row],
+                     cpo_row, cpw_row, wr_row, srv_row, lm_sync, lm_pipe],
             "speedups": {
                 "batched_vs_per_event": speedup,
                 "pod_sharding_overhead": pod_overhead,
@@ -861,13 +965,16 @@ def run(out_dir=None, n_stars=8_000, smoke: bool = False,
                 "cached_portfolio_warm_vs_off": cp_speedup,
                 "server_overhead_vs_per_event": srv_overhead,
                 "server_vs_batched_wall_ratio": srv_vs_batched,
+                "lm_subspace_pipelined_vs_sync_ratio": lm_ratio,
             },
             "parity": {"pod_mesh": pod_parity_ok,
                        "pipelined": pipe_parity_ok,
                        "multi_search": ms_parity_ok,
                        "cached_portfolio": cp_parity_ok,
                        "warm_restart": wr_ok,
-                       "server_determinism": srv_det_ok},
+                       "server_determinism": srv_det_ok,
+                       "lm_subspace": lm_parity_ok,
+                       "lm_zero_compiles": lm_compiles_ok},
             "platform": _platform_meta(),
         }
         with open(bench_path, "w") as f:
@@ -946,6 +1053,18 @@ def run(out_dir=None, n_stars=8_000, smoke: bool = False,
                 f"{srv_row['wall_s']:.3f}s vs event "
                 f"{sv_ev['wall_s']:.3f}s) — service overhead above the "
                 f"{SRV_MAX_OVERHEAD}x ceiling")
+    if section("lm_subspace"):
+        if not lm_parity_ok:
+            raise RuntimeError(
+                "LM-workload pipelined run diverged from the sync run at "
+                "the same seed — committed iterates must be bit-identical "
+                "whatever the fitness (DESIGN.md §11)")
+        if not lm_compiles_ok:
+            raise RuntimeError(
+                f"LM backend compiled "
+                f"{lm_pipe['compiles_after_warm']} program(s) inside the "
+                f"timed reps — the warmed ladder must serve every bucket "
+                f"shape (DESIGN.md §11 zero-compile contract)")
     return results
 
 

@@ -1,0 +1,143 @@
+"""The model stack as the fitness function (DESIGN.md §11).
+
+Every evaluation here is a REAL forward + cross-entropy of a ``models/``
+network on a fixed synthetic batch, its parameters perturbed along a
+k-dimensional orthonormal subspace basis (``core/subspace.py`` — the same
+chart the in-process subspace-Newton optimizer uses).  The asynchronous
+Newton engine searches the coefficient box; the volunteer fleet, the
+orchestrator and the work server never know the objective changed from an
+8-parameter quadratic to a language model.
+
+Three acts:
+  1. solo: one ANM search over the rwkv6 smoke config's loss landscape
+     through the pipelined batched grid — zero compiles once warmed;
+  2. portfolio: a coalesced multi-start portfolio PER smoke config
+     (rwkv6 and the dense h2o-danube), every orchestrated search
+     bit-identical to its solo run, best arch reported;
+  3. crash: the same workload through the checkpointed work server,
+     killed mid-search (simulated crash after N messages) and restored
+     from snapshot + replay log — bit-identical to uninterrupted.
+
+    PYTHONPATH=src python examples/anm_lm.py
+    PYTHONPATH=src python examples/anm_lm.py --act 2 --arch h2o-danube-3-4b
+"""
+import argparse
+import tempfile
+import time
+
+from repro.core.engine import identical_trajectories
+from repro.core.orchestrator import (FleetScheduler, SearchDirector,
+                                     multi_start_specs)
+from repro.core.substrates.batched_grid import BatchedVolunteerGrid
+from repro.core.substrates.eval_backend import bucket_size
+from repro.core.substrates.lm_loss import LmLossEvalBackend
+from repro.server.sim import (ServerSubstrate, SimulatedCrash, lm_problem,
+                              result_doc)
+
+PORTFOLIO_ARCHS = ("rwkv6-7b", "h2o-danube-3-4b")
+
+
+def act1_solo(args):
+    print(f"== act 1: ANM over the {args.arch} loss landscape ==")
+    spec, fleet, wl = lm_problem(arch=args.arch, k=args.k, m=args.m,
+                                 iterations=args.iterations,
+                                 n_hosts=args.hosts)
+    t0 = time.time()
+    max_bucket = bucket_size(BatchedVolunteerGrid.warm_max_bucket(args.m))
+    backend = LmLossEvalBackend(wl, n_dims=args.k, max_bucket=max_bucket)
+    print(f"  workload: {wl.proj.n_params} params, k={wl.k} subspace, "
+          f"warmed ladder in {time.time() - t0:.1f}s "
+          f"({backend.compile_count} compiles)")
+    c0 = backend.compile_count
+    t0 = time.time()
+    engine = spec.build_engine()
+    stats = BatchedVolunteerGrid(None, fleet, backend=backend,
+                                 pipelined=True).run(engine)
+    loss0 = engine.history[0].best_fitness
+    print(f"  {engine.iteration} iterations, loss "
+          f"{loss0:.6f} -> {engine.best_fitness:.6f} in "
+          f"{time.time() - t0:.1f}s wall ({stats.batch_calls} buckets, "
+          f"{backend.compile_count - c0} compiles mid-run)")
+    return backend, spec, fleet, wl
+
+
+def act2_portfolio(args):
+    print("== act 2: a coalesced portfolio per smoke config ==")
+    best = {}
+    for arch in PORTFOLIO_ARCHS:
+        spec, fleet, wl = lm_problem(arch=arch, k=args.k, m=args.m,
+                                     iterations=args.iterations,
+                                     n_hosts=args.hosts)
+        backend = LmLossEvalBackend(wl)
+        sched = FleetScheduler(backend, fleet)
+        specs = multi_start_specs(sched, spec.x0, spec.lo, spec.hi,
+                                  spec.step, spec.anm, args.searches,
+                                  seed=7, jitter=0.3)
+        t0 = time.time()
+        res = SearchDirector(sched, specs).run()
+        wall = time.time() - t0
+        parity = all(identical_trajectories(o.engine,
+                                            o.spec.solo_run(backend))
+                     for o in res.outcomes)
+        co = res.coalesce_stats
+        print(f"  {arch}: {args.searches} searches, "
+              f"{co.dispatches} dispatches for {co.lane_blocks} blocks, "
+              f"best {res.best.engine.best_fitness:.6f} in {wall:.1f}s; "
+              f"solo parity {'ok' if parity else 'FAIL'}")
+        best[arch] = res.best.engine.best_fitness
+    winner = min(best, key=best.get)
+    print(f"  best landscape: {winner} at {best[winner]:.6f}")
+
+
+def act3_crash(args):
+    print("== act 3: kill the work server mid-search, restore ==")
+    spec, fleet, wl = lm_problem(arch=args.arch, k=args.k, m=args.m,
+                                 iterations=args.iterations,
+                                 n_hosts=args.hosts)
+    backend = LmLossEvalBackend(wl)
+    base = result_doc(ServerSubstrate(spec, fleet, backend).run())
+    print(f"  uninterrupted: {base['iteration']} iterations, best "
+          f"{base['best_fitness']:.6f}, {base['pool']['messages']} "
+          f"protocol messages")
+    kill_after = max(50, int(0.4 * base["pool"]["messages"]))
+    with tempfile.TemporaryDirectory(prefix="anm_lm_") as ckpt:
+        try:
+            ServerSubstrate(spec, fleet, backend, ckpt_dir=ckpt,
+                            snapshot_every=25,
+                            max_messages=kill_after).run()
+            print("  FAIL: finished before the crash point")
+            return
+        except SimulatedCrash as e:
+            print(f"  {e}")
+        res = result_doc(ServerSubstrate(spec, fleet, backend,
+                                         ckpt_dir=ckpt).run(resume=True))
+    match = (res["history"] == base["history"]
+             and res["engine_stats"] == base["engine_stats"])
+    print(f"  restored: replayed {res['replayed']} log records, re-leased "
+          f"{res['pool']['resumed_leases']} in-flight workunits, "
+          f"finished at {res['best_fitness']:.6f}")
+    print(f"  bit-identical to uninterrupted: {'ok' if match else 'FAIL'}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--act", type=int, default=0, choices=[0, 1, 2, 3],
+                    help="run one act (0 = all)")
+    ap.add_argument("--arch", default="rwkv6-7b")
+    ap.add_argument("--k", type=int, default=6)
+    ap.add_argument("--m", type=int, default=12)
+    ap.add_argument("--iterations", type=int, default=2)
+    ap.add_argument("--hosts", type=int, default=48)
+    ap.add_argument("--searches", type=int, default=2)
+    args = ap.parse_args()
+
+    if args.act in (0, 1):
+        act1_solo(args)
+    if args.act in (0, 2):
+        act2_portfolio(args)
+    if args.act in (0, 3):
+        act3_crash(args)
+
+
+if __name__ == "__main__":
+    main()

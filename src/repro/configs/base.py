@@ -98,6 +98,14 @@ class ModelConfig:
     # int8 KV/latent cache with per-position scales (halves decode cache
     # bytes + storage; see EXPERIMENTS.md §Perf cell 2).
     quantized_cache: bool = False
+    # Route the loss/train forward's attention and wkv6 hot paths through
+    # kernels/ops.py (Pallas on TPU, pure-jnp ref fallback on CPU — see
+    # compat.route_pallas / DESIGN.md §11).  Only the contiguous-position
+    # prefill leg routes; decode and cache-threading paths are unchanged.
+    # Off by default: the routed softmax/scan orderings differ from the
+    # dense einsum path in the last ulp, and published-arch smoke tests
+    # pin the dense numbers.
+    use_kernels: bool = False
 
     @property
     def resolved_head_dim(self) -> int:

@@ -1,0 +1,133 @@
+"""Shared subspace-projection machinery (DESIGN.md §11).
+
+A k-dimensional search over an n-parameter model needs exactly one piece
+of geometry: an anchor point θ0, an orthonormal basis V (k, P) over the
+raveled parameter vector, and the lift c ↦ θ0 + Σᵢ cᵢ·Vᵢ.  Two consumers
+share it:
+
+  * ``core/subspace_newton.py`` — the in-process subspace-Newton optimizer
+    (ravel → basis → lift → regression), which re-anchors every step;
+  * ``core/substrates/lm_loss.py`` — the LM-loss ``EvalBackend``, which
+    fixes one projection for a whole search and evaluates engine
+    candidates (subspace coefficient vectors) as model losses.
+
+The lift is computed LEAF BY LEAF (``basis_tree`` mirrors the parameter
+pytree with a leading k axis), never through the raveled vector: the
+flat form would force every evaluation through one (P,) concatenation,
+while the tree form keeps each leaf's contribution a standalone
+``tensordot`` — which is what lets the pod backend shard θ0 and the basis
+with the model's own ``param_specs`` (the basis leaf for a weight sharded
+``P(None, 'model', None)`` is sharded ``P(None, None, 'model', None)``)
+and reconstruct full leaves with per-leaf all-gathers.  Both backends run
+the SAME per-leaf lift, so in-process and pod evaluations agree bitwise.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def ravel_pytree(tree):
+    """(flat f32 (P,), unravel) — unravel restores shapes AND leaf dtypes."""
+    leaves, treedef = jax.tree.flatten(tree)
+    flat = jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in leaves])
+    shapes = [(l.shape, l.dtype) for l in leaves]
+
+    def unravel(v):
+        out, off = [], 0
+        for shape, dtype in shapes:
+            size = 1
+            for s in shape:
+                size *= s
+            out.append(v[off:off + size].reshape(shape).astype(dtype))
+            off += size
+        return jax.tree.unflatten(treedef, out)
+
+    return flat, unravel
+
+
+def orthonormal_basis(key, n: int, k: int,
+                      anchor: Optional[jax.Array] = None) -> jax.Array:
+    """(k, P) orthonormal rows: ``anchor`` (momentum/gradient) first when
+    given, random normal directions for the rest, Gram-Schmidt via QR on
+    the transpose.  Deterministic per (key, n, k, anchor)."""
+    if anchor is not None:
+        rows = jnp.concatenate(
+            [anchor[None, :], jax.random.normal(key, (k - 1, n))], axis=0)
+    else:
+        rows = jax.random.normal(key, (k, n))
+    q, _ = jnp.linalg.qr(rows.T)                    # (P, k)
+    return q.T                                      # (k, P)
+
+
+def basis_to_tree(basis: jax.Array, params) -> Any:
+    """Reshape each (P,)-row-slice of the flat basis into a pytree leaf of
+    shape (k, *leaf.shape), kept f32 (directions must not round through
+    bf16 storage dtypes)."""
+    leaves, treedef = jax.tree.flatten(params)
+    k = basis.shape[0]
+    out, off = [], 0
+    for l in leaves:
+        size = int(l.size)
+        out.append(basis[:, off:off + size].reshape((k,) + l.shape))
+        off += size
+    return jax.tree.unflatten(treedef, out)
+
+
+def tree_lift(theta0, basis_tree, c):
+    """θ0 + Σᵢ cᵢ·Vᵢ computed per leaf in f32, cast back to each leaf's
+    storage dtype.  THE canonical lift: every consumer (optimizer step,
+    in-process backend, pod shard_map body) calls this one function, so
+    subspace evaluations can never diverge between them."""
+    return jax.tree.map(
+        lambda p, b: (p.astype(jnp.float32)
+                      + jnp.tensordot(c, b, axes=1)).astype(p.dtype),
+        theta0, basis_tree)
+
+
+@dataclasses.dataclass(frozen=True)
+class SubspaceProjection:
+    """One fixed k-dim affine chart through parameter space.
+
+    ``theta0``: anchor pytree (original leaf dtypes); ``basis``: (k, P)
+    f32 orthonormal rows over the raveled vector; ``basis_tree``: the same
+    basis reshaped leaf-by-leaf (k, *leaf.shape) — the form evaluation
+    actually uses; ``unravel``: (P,) → pytree (kept for flat-space
+    consumers like the optimizer's momentum update).
+    """
+    theta0: Any
+    flat0: jax.Array
+    basis: jax.Array
+    basis_tree: Any
+    unravel: Callable = dataclasses.field(repr=False)
+
+    @property
+    def k(self) -> int:
+        return int(self.basis.shape[0])
+
+    @property
+    def n_params(self) -> int:
+        return int(self.basis.shape[1])
+
+    @classmethod
+    def create(cls, params, k: int, key,
+               anchor: Optional[jax.Array] = None) -> "SubspaceProjection":
+        flat, unravel = ravel_pytree(params)
+        basis = orthonormal_basis(key, flat.shape[0], k, anchor)
+        return cls(theta0=params, flat0=flat, basis=basis,
+                   basis_tree=basis_to_tree(basis, params), unravel=unravel)
+
+    def lift(self, c):
+        """c (k,) → params pytree at θ0 + c·V (leaf-wise lift)."""
+        return tree_lift(self.theta0, self.basis_tree, c)
+
+    def lift_flat(self, c):
+        """c (k,) → raveled (P,) f32 point (flat-space consumers only)."""
+        return self.flat0 + c @ self.basis
+
+    def shift_flat(self, c):
+        """c (k,) → the raveled displacement c·V (momentum updates)."""
+        return c @ self.basis

@@ -10,17 +10,25 @@ the paper's straggler/fault tolerance, by construction), the regression of
 The subspace basis V mixes the momentum direction, the latest gradient
 estimate and random directions, so the method degrades gracefully to
 random-subspace descent when the quadratic model is poor.
+
+The ravel/basis/lift geometry lives in ``core/subspace.py``
+(``SubspaceProjection``) and is SHARED with the LM-loss evaluation backend
+(``core/substrates/lm_loss.py``): this optimizer re-anchors a fresh
+projection every step, the backend freezes one for a whole asynchronous
+search — but both lift subspace coefficients through the same per-leaf
+``tree_lift``, so an engine candidate means the same model parameters
+everywhere.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Callable, Optional, Tuple
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import regression, sampling
+from repro.core import regression
+from repro.core.subspace import SubspaceProjection, orthonormal_basis, ravel_pytree
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,38 +46,19 @@ class SubspaceNewtonConfig:
         return self.m or 2 * regression.n_columns(self.k)
 
 
-def _ravel(tree):
-    leaves, treedef = jax.tree.flatten(tree)
-    flat = jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in leaves])
-    shapes = [(l.shape, l.dtype) for l in leaves]
-
-    def unravel(v):
-        out, off = [], 0
-        for shape, dtype in shapes:
-            size = 1
-            for s in shape:
-                size *= s
-            out.append(v[off:off + size].reshape(shape).astype(dtype))
-            off += size
-        return jax.tree.unflatten(treedef, out)
-
-    return flat, unravel
+# kept under their historical names: callers (and the shared-machinery
+# contract) reach the one implementation in core/subspace.py
+_ravel = ravel_pytree
 
 
 def init_state(params):
-    flat, _ = _ravel(params)
+    flat, _ = ravel_pytree(params)
     return {"momentum": jnp.zeros_like(flat), "step": jnp.zeros((), jnp.int32)}
 
 
 def make_basis(key, flat_params, momentum, k: int):
     """(k, P) orthonormal basis: momentum + random directions."""
-    n = flat_params.shape[0]
-    dirs = [momentum]
-    rnd = jax.random.normal(key, (k - 1, n))
-    basis = jnp.concatenate([momentum[None, :], rnd], axis=0)
-    # Gram-Schmidt (QR on the transpose)
-    q, _ = jnp.linalg.qr(basis.T)                   # (P, k)
-    return q.T                                      # (k, P)
+    return orthonormal_basis(key, flat_params.shape[0], k, anchor=momentum)
 
 
 def subspace_newton_step(loss_fn: Callable, params, state,
@@ -85,15 +74,15 @@ def subspace_newton_step(loss_fn: Callable, params, state,
     """
     k = cfg.k
     m = cfg.m_resolved()
-    flat, unravel = _ravel(params)
     k_basis, k_box, k_line = jax.random.split(key, 3)
-    V = make_basis(k_basis, flat, state["momentum"], k)          # (k,P)
+    proj = SubspaceProjection.create(params, k, k_basis,
+                                     anchor=state["momentum"])
 
     coeffs = jax.random.uniform(k_box, (m, k), minval=-cfg.sample_scale,
                                 maxval=cfg.sample_scale)
 
     def eval_at(c):
-        return loss_fn(unravel(flat + c @ V))
+        return loss_fn(proj.lift(c))
 
     ys = jax.lax.map(eval_at, coeffs)
     weights = None
@@ -112,9 +101,8 @@ def subspace_newton_step(loss_fn: Callable, params, state,
     take = f_cand[best] < f0
     alpha_best = jnp.where(take, alphas[best], 0.0)
 
-    delta_flat = (alpha_best * d) @ V
-    new_flat = flat + delta_flat
-    new_params = unravel(new_flat)
+    delta_flat = proj.shift_flat(alpha_best * d)
+    new_params = proj.unravel(proj.flat0 + delta_flat)
     mom = cfg.momentum * state["momentum"] + delta_flat
     info = {"loss_before": f0, "loss_after": jnp.minimum(f_cand[best], f0),
             "alpha": alpha_best, "grad_norm": jnp.linalg.norm(g)}

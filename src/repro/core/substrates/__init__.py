@@ -16,4 +16,6 @@ from repro.core.substrates.eval_backend import (  # noqa: F401
 from repro.core.substrates.eval_cache import (  # noqa: F401
     CacheStats, CachingSubmitter, EvalCache, JsonlCacheStore,
     MemoryCacheStore, SqliteCacheStore)
+from repro.core.substrates.lm_loss import (  # noqa: F401
+    LmLossEvalBackend, LmWorkload, make_lm_workload)
 from repro.core.substrates.pod_mesh import PodMeshEvalBackend  # noqa: F401

@@ -11,7 +11,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import compat
+from repro.kernels import compat, ref
 from repro.kernels import flash_attention as _fa
 from repro.kernels import gram as _gram
 from repro.kernels import wkv6 as _wkv6
@@ -72,6 +72,50 @@ def wkv6(r, k, v, lw, u, *, chunk: int = 256, interpret: bool | None = None):
     out = _wkv6.wkv6(to_k(r), to_k(k), to_k(v), to_k(lw), u, chunk=c,
                      interpret=interpret)
     return out.transpose(0, 2, 1, 3)
+
+
+# ---------------------------------------------------------------------------
+# Routed model hot paths (DESIGN.md §11): the model's attention and wkv6
+# blocks call these when ``ModelConfig.use_kernels`` is set, and
+# ``compat.route_pallas`` picks Pallas (TPU) or the pure-jnp ref oracle
+# (CPU fallback) at trace time.  Both legs take MODEL layout tensors, so
+# the caller never handles layout or GQA expansion.
+# ---------------------------------------------------------------------------
+
+def routed_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                     pallas: bool | None = None):
+    """q: (B, S, Hq, D); k/v: (B, S, Hkv, D) -> (B, S, Hq, D).
+
+    Contiguous causal/sliding-window prefill attention only (positions are
+    implicit ``arange`` — exactly the loss/train forward's case); decode
+    and packed-position paths stay on the dense mask in models/layers.py.
+    """
+    if compat.route_pallas(pallas):
+        return flash_attention(q, k, v, causal=causal, window=window)
+    b, s, hq, d = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    # GQA expansion ordered exactly like flash_attention's grouping:
+    # q head h serves kv head h // g
+    kf = jnp.repeat(k, g, axis=2) if g > 1 else k
+    vf = jnp.repeat(v, g, axis=2) if g > 1 else v
+    out = ref.attention_ref(q.transpose(0, 2, 1, 3), kf.transpose(0, 2, 1, 3),
+                            vf.transpose(0, 2, 1, 3), causal=causal,
+                            window=window)
+    return out.transpose(0, 2, 1, 3)
+
+
+def routed_wkv6(r, k, v, lw, u, *, chunk: int = 256,
+                pallas: bool | None = None):
+    """r,k,v,lw: (B, T, H, K); u: (H, K) -> (B, T, H, K) — model layout.
+
+    Returns the mixed output only (no final recurrent state): the routed
+    path serves loss/train forwards, where the state is discarded; decode
+    and prefill-into-cache keep ``models/ssm.py``'s chunked scan.
+    """
+    if compat.route_pallas(pallas):
+        return wkv6(r, k, v, lw, u, chunk=chunk)
+    return ref.wkv6_ref(r, k, v, lw, u)[0]
 
 
 def gram(x, y, *, block_m: int = 512, interpret: bool | None = None):

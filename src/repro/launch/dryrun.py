@@ -510,6 +510,175 @@ def run_cached_portfolio_smoke(out_dir: str, n_searches: int = 8,
     return ok
 
 
+def run_lm_subspace_smoke(out_dir: str, arch: str = "rwkv6-7b",
+                          k: int = 6, m: int = 12, iterations: int = 2,
+                          n_hosts: int = 48) -> bool:
+    """LM-loss workload smoke (``--substrate lm_subspace``).
+
+    The model stack IS the fitness function: an ``LmWorkload`` over one
+    smoke config (kernels routed through ``kernels/ops.py``), searched in
+    its k-dim subspace-coefficient box by the full asynchronous stack.
+    Gates (DESIGN.md §11):
+
+      1. sync == pipelined == pod: the batched grid commits bit-identical
+         iterates through the in-process backend (both tick loops) and
+         through the pod backend — lanes sharded over ``data``, θ0 and
+         the basis STORED sharded over ``model`` on the production 16×16
+         mesh — with ZERO compiles once warmed;
+      2. orchestrator + cache: a coalesced 2-search portfolio over the
+         shared backend, evaluated through ``CachingSubmitter``; every
+         search bit-identical to its solo run, warm replay fully served;
+      3. work server: the same workload through the crash-recoverable
+         server (simulated crash mid-run, restore from snapshot + replay
+         log) — restored == uninterrupted, and in-process == pod through
+         the whole server stack.
+
+    Writes artifacts/dryrun/substrate_lm_subspace.json; returns pass/fail.
+    """
+    import numpy as np
+    from repro.core.engine import identical_trajectories
+    from repro.core.orchestrator import (FleetScheduler, SearchDirector,
+                                         multi_start_specs)
+    from repro.core.substrates.batched_grid import BatchedVolunteerGrid
+    from repro.core.substrates.eval_backend import bucket_size
+    from repro.core.substrates.eval_cache import EvalCache
+    from repro.core.substrates.lm_loss import LmLossEvalBackend
+    from repro.server.sim import (ServerSubstrate, SimulatedCrash,
+                                  lm_problem, result_doc)
+
+    mesh = make_production_mesh()
+    spec, fleet, wl = lm_problem(arch=arch, k=k, n_hosts=n_hosts, m=m,
+                                 iterations=iterations)
+    max_bucket = bucket_size(BatchedVolunteerGrid.warm_max_bucket(m))
+    t0 = time.time()
+    in_backend = LmLossEvalBackend(wl, n_dims=k, max_bucket=max_bucket)
+    pod = LmLossEvalBackend(wl, mesh=mesh, n_dims=k, max_bucket=max_bucket)
+    t_warm = time.time() - t0
+    compiles_warm = (in_backend.compile_count, pod.compile_count)
+
+    # -- gate 1: sync == pipelined == pod, zero compiles after warm --------
+    def grid_run(backend, pipelined):
+        engine = spec.build_engine()
+        t0 = time.time()
+        stats = BatchedVolunteerGrid(None, spec.grid, backend=backend,
+                                     pipelined=pipelined).run(engine)
+        return engine, stats, time.time() - t0
+
+    e_sync, s_sync, t_sync = grid_run(in_backend, False)
+    e_pipe, s_pipe, t_pipe = grid_run(in_backend, True)
+    e_pod, s_pod, t_pod = grid_run(pod, True)
+    pipe_ok = identical_trajectories(e_sync, e_pipe)
+    pod_ok = identical_trajectories(e_sync, e_pod)
+    zero_compiles = (in_backend.compile_count == compiles_warm[0]
+                     and pod.compile_count == compiles_warm[1])
+
+    # -- gate 2: coalesced portfolio through CachingSubmitter --------------
+    cache = EvalCache(fingerprint=f"lm_subspace/{arch}/{k}")
+    def portfolio():
+        sched = FleetScheduler(in_backend, fleet, cache=cache)
+        specs = multi_start_specs(sched, spec.x0, spec.lo, spec.hi,
+                                  spec.step, spec.anm, 2, seed=7,
+                                  jitter=0.3)
+        return SearchDirector(sched, specs).run()
+
+    t0 = time.time()
+    cold = portfolio()
+    misses0, hits0 = cache.stats.misses, cache.stats.hits
+    warm = portfolio()
+    t_port = time.time() - t0
+    solo_parity = [identical_trajectories(o.engine,
+                                          o.spec.solo_run(in_backend))
+                   for o in cold.outcomes]
+    warm_parity = all(identical_trajectories(a.engine, b.engine)
+                      for a, b in zip(cold.outcomes, warm.outcomes))
+    warm_served = (cache.stats.misses == misses0
+                   and cache.stats.hits > hits0)
+    orch_ok = all(solo_parity) and warm_parity and warm_served
+
+    # -- gate 3: the crash-recoverable work server -------------------------
+    import tempfile
+    t0 = time.time()
+    base_doc = result_doc(ServerSubstrate(spec, fleet, in_backend).run())
+    pod_doc = result_doc(ServerSubstrate(spec, fleet, pod).run())
+    server_backend_ok = (
+        base_doc["history"] == pod_doc["history"]
+        and base_doc["engine_stats"] == pod_doc["engine_stats"])
+    kill_after = max(50, int(0.4 * base_doc["pool"]["messages"]))
+    with tempfile.TemporaryDirectory(prefix="lm_server_") as ckpt:
+        try:
+            ServerSubstrate(spec, fleet, in_backend, ckpt_dir=ckpt,
+                            snapshot_every=25,
+                            max_messages=kill_after).run()
+            crashed = False            # finished before the crash: fail
+        except SimulatedCrash:
+            crashed = True
+        resumed = ServerSubstrate(spec, fleet, in_backend,
+                                  ckpt_dir=ckpt).run(resume=True)
+    res_doc = result_doc(resumed)
+    restore_ok = (crashed and not res_doc["recovered_done"]
+                  and res_doc["history"] == base_doc["history"]
+                  and res_doc["engine_stats"] == base_doc["engine_stats"])
+    t_server = time.time() - t0
+
+    ok = (pipe_ok and pod_ok and zero_compiles and orch_ok
+          and server_backend_ok and restore_ok)
+    report = {
+        "arch": arch, "k": k, "m": m, "iterations": iterations,
+        "mesh": "16x16", "n_params": int(wl.proj.n_params),
+        "data_shards": pod.n_shards, "min_bucket": pod.min_bucket,
+        "model_spec_fallbacks": len(pod.spec_fallbacks),
+        "warm_s": round(t_warm, 3),
+        "compiles": {"in_process": in_backend.compile_count,
+                     "pod": pod.compile_count,
+                     "zero_after_warm": zero_compiles},
+        "grid": {
+            "iterations": {"sync": e_sync.iteration,
+                           "pipelined": e_pipe.iteration,
+                           "pod": e_pod.iteration},
+            "final": {"sync": e_sync.best_fitness,
+                      "pipelined": e_pipe.best_fitness,
+                      "pod": e_pod.best_fitness},
+            "batch_calls": {"sync": s_sync.batch_calls,
+                            "pipelined": s_pipe.batch_calls,
+                            "pod": s_pod.batch_calls},
+            "wall_s": {"sync": round(t_sync, 3),
+                       "pipelined": round(t_pipe, 3),
+                       "pod": round(t_pod, 3)},
+            "pipelined_parity_ok": pipe_ok, "pod_parity_ok": pod_ok,
+        },
+        "orchestrator": {
+            "solo_parity": solo_parity, "warm_replay_parity": warm_parity,
+            "warm_fully_served": warm_served, "cache": cache.status(),
+            "wall_s": round(t_port, 3), "parity_ok": orch_ok,
+        },
+        "server": {
+            "iterations": base_doc["iteration"],
+            "best": base_doc["best_fitness"],
+            "messages": base_doc["pool"]["messages"],
+            "backend_parity_ok": server_backend_ok,
+            "crashed_mid_run": crashed,
+            "replayed": res_doc["replayed"],
+            "resumed_leases": res_doc["pool"]["resumed_leases"],
+            "restore_parity_ok": restore_ok,
+            "wall_s": round(t_server, 3),
+        },
+        "parity_ok": ok,
+    }
+    path = os.path.join(out_dir, "substrate_lm_subspace.json")
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"[{'ok' if ok else 'FAIL'}] substrate lm_subspace: {arch} "
+          f"({wl.proj.n_params} params, k={k}), grid "
+          f"{'ok' if pipe_ok and pod_ok else 'FAIL'} "
+          f"(wall {t_sync:.1f}s/{t_pipe:.1f}s/{t_pod:.1f}s "
+          f"sync/pipelined/pod), compiles "
+          f"{'0' if zero_compiles else 'NONZERO'} after warm, "
+          f"orchestrator {'ok' if orch_ok else 'FAIL'}, server "
+          f"{'ok' if server_backend_ok and restore_ok else 'FAIL'} "
+          f"-> {path}")
+    return ok
+
+
 def run_server_smoke(out_dir: str, n_hosts: int = 160, m: int = 24,
                      iterations: int = 4, n_stars: int = 400) -> bool:
     """Service-layer kill/restore smoke (``--substrate server``).

@@ -47,6 +47,13 @@ SUBSTRATES: Dict[str, SubstrateSmoke] = {
         "AND pod mesh: cache-on cold and warm runs bit-identical to "
         "cache-off, warm rerun fully served (zero new misses)",
         "repro.launch.dryrun:run_cached_portfolio_smoke"),
+    "lm_subspace": SubstrateSmoke(
+        "lm_subspace",
+        "LM-loss workload: the models/ stack as the fitness function, "
+        "parameters perturbed along a shared subspace basis; sync + "
+        "pipelined + model/data-sharded pod backend bit-identical, same "
+        "backend under the coalescing orchestrator and the work server",
+        "repro.launch.dryrun:run_lm_subspace_smoke"),
     "server": SubstrateSmoke(
         "server",
         "fault-tolerant work server: seeded search over loopback and TCP "

@@ -16,6 +16,7 @@ from repro.models.transformer import (  # noqa: F401
 )
 from repro.models.sharding import (  # noqa: F401
     cache_specs,
+    enforce_divisible,
     input_specs,
     mesh_axes,
     param_specs,

@@ -181,8 +181,17 @@ def attention_block(
     k = apply_rope(k, positions, cfg.rope_theta)
 
     if cache is None:
-        mask = _prefill_mask(cfg, positions)
-        out = _attend(q, k, v, mask)
+        if cfg.use_kernels and cfg.causal:
+            # routed hot path (DESIGN.md §11): Pallas flash attention on
+            # TPU, kernels/ref.py oracle on CPU.  The kernels take
+            # positions as implicit arange, which the loss/train forward
+            # guarantees; non-causal and decode paths keep the dense mask.
+            from repro.kernels import ops as K
+            out = K.routed_attention(q, k, v, causal=True,
+                                     window=cfg.sliding_window)
+        else:
+            mask = _prefill_mask(cfg, positions)
+            out = _attend(q, k, v, mask)
     else:
         window = cache["k"].shape[1]
         idx = t % window if cfg.sliding_window > 0 else t

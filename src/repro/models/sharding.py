@@ -124,6 +124,50 @@ def param_specs(cfg: ModelConfig, mesh: Mesh, fsdp: bool = False):
     return jax.tree_util.tree_map_with_path(assign, shapes)
 
 
+def enforce_divisible(cfg: ModelConfig, mesh: Mesh, specs=None):
+    """Downgrade any param-spec entry whose dimension does not divide its
+    mesh axes to replicated — EXPLICITLY, returning the fallback report.
+
+    ``param_specs`` already replicates the known-fragile tensors (kv heads,
+    tied embeddings, lm head) behind per-rule ``_div`` checks, but a rule
+    can still emit a spec a *small* config cannot honor (a smoke config's
+    4 heads over model=16).  GSPMD would silently pad-and-shard such a
+    leaf; ``shard_map`` — which the LM-loss evaluation backend uses for
+    exact control of the numerics — rejects it.  This walk is the one
+    place the divisibility contract is enforced tree-wide: every surviving
+    entry divides, every downgrade is reported as
+    ``(path, dim, axis_entry, dim_size)`` so tests (and a new config's
+    author) see exactly which tensors fell back to replication instead of
+    discovering it as a silent perf cliff.
+
+    Returns ``(specs, fallbacks)``.
+    """
+    if specs is None:
+        specs = param_specs(cfg, mesh)
+    shapes = jax.eval_shape(functools.partial(T.init_params, cfg),
+                            jax.random.key(0))
+    fallbacks = []
+
+    def fix(path, spec, leaf):
+        entries = list(spec)
+        for dim, e in enumerate(entries):
+            if e is None:
+                continue
+            axes = e if isinstance(e, tuple) else (e,)
+            size = 1
+            for a in axes:
+                size *= mesh.shape[a]
+            if leaf.shape[dim] % size:
+                fallbacks.append(("/".join(str(n) for n in _path_names(path)),
+                                  dim, e, leaf.shape[dim]))
+                entries[dim] = None
+        return P(*entries)
+
+    fixed = jax.tree_util.tree_map_with_path(
+        fix, specs, shapes, is_leaf=lambda x: isinstance(x, P))
+    return fixed, fallbacks
+
+
 # ---------------------------------------------------------------------------
 # Decode caches
 # ---------------------------------------------------------------------------

@@ -161,7 +161,17 @@ def rwkv6_time_mix(x, p, cfg: ModelConfig, shift_state=None, wkv_state=None):
     lw = jnp.clip(lw, _LOG_DECAY_MIN, -1e-6)
 
     if wkv_state is None:
-        o, s_fin = wkv6_chunked(r, k, v, lw, p["u"])
+        if cfg.use_kernels:
+            # routed hot path (DESIGN.md §11): Pallas wkv6 on TPU, the
+            # kernels/ref.py sequential oracle on CPU.  Loss/train
+            # forwards discard the recurrent state, so the routed leg
+            # returns a zero state; prefill-into-cache and decode keep
+            # the chunked scan below (which threads it correctly).
+            from repro.kernels import ops as K
+            o = K.routed_wkv6(r, k, v, lw, p["u"])
+            s_fin = jnp.zeros((b, h, hd, hd), jnp.float32)
+        else:
+            o, s_fin = wkv6_chunked(r, k, v, lw, p["u"])
     else:
         o1, s_fin = wkv6_step(r[:, 0], k[:, 0], v[:, 0], lw[:, 0], p["u"], wkv_state)
         o = o1[:, None]

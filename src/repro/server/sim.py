@@ -396,6 +396,32 @@ def smoke_problem(n_stars: int = 400, n_hosts: int = 192, m: int = 24,
     return spec, fleet, f_batch
 
 
+def lm_problem(arch: str = "rwkv6-7b", k: int = 6, n_hosts: int = 48,
+               m: int = 12, iterations: int = 2, engine_seed: int = 7,
+               grid_seed: int = 9, failure: float = 0.05,
+               malicious: float = 0.02, quorum: int = 2,
+               workload_seed: int = 3):
+    """The LM-loss counterpart of ``smoke_problem``: the search space is
+    the k-dim subspace-coefficient box of an ``LmWorkload`` over one of
+    the smoke model configs, and every fitness evaluation is a real
+    forward + loss (``LmLossEvalBackend``).  Returns (spec, fleet,
+    workload); the caller picks the evaluation mesh when it builds the
+    backend.  Parameters are the workload identity, exactly as for the
+    SDSS smoke — same values in two processes ⇒ bit-identical search."""
+    from repro.core.anm import AnmConfig
+    from repro.core.substrates.lm_loss import make_lm_workload
+
+    wl = make_lm_workload(arch, k=k, seed=workload_seed)
+    fleet = GridConfig(n_hosts=n_hosts, failure_prob=failure,
+                       malicious_prob=malicious, seed=grid_seed)
+    spec = SearchSpec(
+        name=f"lm_{arch}", x0=wl.x0, lo=wl.lo, hi=wl.hi, step=wl.step,
+        anm=AnmConfig(m_regression=m, m_line_search=m,
+                      max_iterations=iterations),
+        grid=fleet, engine_seed=engine_seed, validation_quorum=quorum)
+    return spec, fleet, wl
+
+
 def result_doc(res: ServerRunResult) -> dict:
     """JSON-able run outcome: the full committed trajectory + stats, the
     exact objects the kill/restore gates compare bit-for-bit (float64
@@ -432,6 +458,13 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     choices=["loopback", "tcp"])
     ap.add_argument("--backend", default="in_process",
                     choices=["in_process", "pod_mesh"])
+    ap.add_argument("--problem", default="sdss", choices=["sdss", "lm"],
+                    help="sdss: the 8-param stream fit; lm: the subspace-"
+                         "Newton LM-loss workload (--arch/--k)")
+    ap.add_argument("--arch", default="rwkv6-7b",
+                    help="smoke model config for --problem lm")
+    ap.add_argument("--k", type=int, default=6,
+                    help="subspace dimension for --problem lm")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--out", default=None, help="result JSON path")
@@ -454,27 +487,44 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                          "the trajectory is identical)")
     args = ap.parse_args(argv)
 
-    spec, fleet, f_batch = smoke_problem(
-        n_stars=args.n_stars, n_hosts=args.n_hosts, m=args.m,
-        iterations=args.iterations, engine_seed=args.engine_seed,
-        grid_seed=args.grid_seed, failure=args.failure,
-        malicious=args.malicious)
-    if args.backend == "pod_mesh":
-        from repro.core.substrates.pod_mesh import PodMeshEvalBackend
-        backend = PodMeshEvalBackend(f_batch)
+    if args.problem == "lm":
+        spec, fleet, wl = lm_problem(
+            arch=args.arch, k=args.k, n_hosts=args.n_hosts, m=args.m,
+            iterations=args.iterations, engine_seed=args.engine_seed,
+            grid_seed=args.grid_seed, failure=args.failure,
+            malicious=args.malicious)
+        from repro.core.substrates.lm_loss import LmLossEvalBackend
+        if args.backend == "pod_mesh":
+            from repro.launch.mesh import make_production_mesh
+            backend = LmLossEvalBackend(wl, mesh=make_production_mesh())
+        else:
+            backend = LmLossEvalBackend(wl)
     else:
-        from repro.core.substrates.eval_backend import InProcessEvalBackend
-        backend = InProcessEvalBackend(f_batch)
+        spec, fleet, f_batch = smoke_problem(
+            n_stars=args.n_stars, n_hosts=args.n_hosts, m=args.m,
+            iterations=args.iterations, engine_seed=args.engine_seed,
+            grid_seed=args.grid_seed, failure=args.failure,
+            malicious=args.malicious)
+        if args.backend == "pod_mesh":
+            from repro.core.substrates.pod_mesh import PodMeshEvalBackend
+            backend = PodMeshEvalBackend(f_batch)
+        else:
+            from repro.core.substrates.eval_backend import InProcessEvalBackend
+            backend = InProcessEvalBackend(f_batch)
     cache = None
     if args.cache:
         from repro.core.substrates.eval_cache import JsonlCacheStore
         from repro.server.checkpoint import eval_cache_path
         # the fingerprint names the OBJECTIVE identity (stripe + fleet
-        # shape), so every process over the same smoke problem — baseline,
-        # killed, resumed — shares keys, and a different problem never
-        # collides
-        fp = (f"server_smoke/{args.n_stars}/{args.n_hosts}/{args.m}/"
-              f"{args.iterations}")
+        # shape — or the LM workload), so every process over the same
+        # smoke problem — baseline, killed, resumed — shares keys, and a
+        # different problem never collides
+        if args.problem == "lm":
+            fp = (f"lm_subspace/{args.arch}/{args.k}/{args.n_hosts}/"
+                  f"{args.m}/{args.iterations}")
+        else:
+            fp = (f"server_smoke/{args.n_stars}/{args.n_hosts}/{args.m}/"
+                  f"{args.iterations}")
         store = (JsonlCacheStore(eval_cache_path(args.ckpt_dir))
                  if args.ckpt_dir else None)
         cache = EvalCache(store, fingerprint=fp)
@@ -486,6 +536,9 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     doc = result_doc(res)
     doc["transport"] = args.transport
     doc["backend"] = args.backend
+    doc["problem"] = args.problem
+    if args.problem == "lm":
+        doc["arch"] = args.arch
     if args.out:
         os.makedirs(os.path.dirname(os.path.abspath(args.out)),
                     exist_ok=True)
