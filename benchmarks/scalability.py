@@ -99,6 +99,9 @@ MS_SEARCHES = 8                       # multi-search shootout portfolio size
 MS_REPS = 5                           # its alternating timing reps
 SRV_REPS = 3                          # server-overhead alternating reps
 SRV_MAX_OVERHEAD = 1.5                # vs the per-event FGDO baseline
+CHAOS_REPS = 3                        # degraded-mode alternating reps
+CHAOS_CLIENTS = 8                     # concurrent TCP clients, chaos row
+CHAOS_MAX_SLOWDOWN = 2.5              # degraded vs clean concurrent wall
 LM_REPS = 3                           # lm-workload alternating reps
 
 
@@ -501,6 +504,90 @@ def _server_shootout(n_hosts: int, n_stars: int, m: int, iters: int):
     return (event_row, batched_row, server_row,
             wall_srv / max(wall_ev, 1e-9),
             wall_srv / max(wall_bt, 1e-9), determinism_ok)
+
+
+def _chaos_degraded_row(n_hosts: int, n_stars: int, m: int, iters: int):
+    """Degraded-mode work service (DESIGN.md §12): the SAME seeded search
+    three ways over one warmed backend:
+
+      * serial loopback ``ServerSubstrate`` — the fault-free parity
+        reference (not timed);
+      * ``CHAOS_CLIENTS`` truly concurrent TCP client threads behind the
+        sequenced intake on a clean transport — the timing denominator;
+      * the same concurrent pool through ``ChaosTransport`` under the
+        seeded ``degraded`` preset (10% request drops + 5% duplication)
+        — throughput and p99 ``request_work`` latency under faults.
+
+    Wall-clock is best-of ``CHAOS_REPS`` alternating reps.  BOTH
+    concurrent runs must replay to iterates and engine stats
+    bit-identical to the serial baseline (the §12 ordering-tolerance
+    gate), and the degraded wall is capped at ``CHAOS_MAX_SLOWDOWN`` x
+    the clean wall.  Returns (clean_row, degraded_row, slowdown,
+    parity_ok)."""
+    from repro.core.orchestrator.director import SearchSpec
+    from repro.server.sim import ServerSubstrate
+
+    stripe = sdss.make_stripe("chaos_row", n_stars=n_stars, seed=29)
+    f_batch, _ = sdss.make_fitness(stripe)
+    rng = np.random.default_rng(3)
+    x0 = np.clip(stripe.truth + rng.normal(0, 0.2, 8).astype(np.float32),
+                 sdss.LO, sdss.HI)
+    anm_cfg = AnmConfig(m_regression=m, m_line_search=m,
+                        max_iterations=iters)
+    grid_cfg = GridConfig(n_hosts=n_hosts, failure_prob=0.05,
+                          malicious_prob=0.02, seed=9)
+    backend = InProcessEvalBackend(f_batch, n_dims=8,
+                                   max_bucket=bucket_size(n_hosts))
+    spec = SearchSpec(
+        name="chaos_row", x0=np.asarray(x0, np.float64),
+        lo=np.asarray(sdss.LO, np.float64),
+        hi=np.asarray(sdss.HI, np.float64),
+        step=np.asarray(sdss.DEFAULT_STEP, np.float64),
+        anm=anm_cfg, grid=grid_cfg, engine_seed=7)
+
+    base = ServerSubstrate(spec, grid_cfg, backend).run()  # warms jits too
+
+    def run_conc(chaos):
+        sub = ServerSubstrate(spec, grid_cfg, backend, transport="tcp",
+                              concurrent=CHAOS_CLIENTS, chaos=chaos,
+                              warm=False)
+        t0 = time.perf_counter()
+        res = sub.run()
+        return res, time.perf_counter() - t0
+
+    run_conc(None), run_conc("degraded")   # warm the thread/socket path
+    t_cl, t_dg, res_cl, res_dg = [], [], None, None
+    for _ in range(CHAOS_REPS):            # alternate: noise hits both
+        res_cl, t = run_conc(None)
+        t_cl.append(t)
+        res_dg, t = run_conc("degraded")
+        t_dg.append(t)
+
+    def same(res):
+        return (identical_trajectories(base.engines[0], res.engines[0])
+                and base.engines[0].stats == res.engines[0].stats)
+
+    parity_ok = same(res_cl) and same(res_dg)
+    wall_cl, wall_dg = min(t_cl), min(t_dg)
+    slowdown = wall_dg / max(wall_cl, 1e-9)
+
+    def row(name, res, wall, reps):
+        return {
+            "substrate": name, "n_hosts": n_hosts, "m": m,
+            "clients": CHAOS_CLIENTS,
+            "wall_s": wall, "wall_s_reps": [round(t, 4) for t in reps],
+            "messages": res.pool.messages,
+            "throughput_msg_s": res.pool.messages / max(wall, 1e-9),
+            "request_p99_ms": res.request_p99_ms,
+            "intake": res.intake,
+            "chaos": ({k: v for k, v in res.chaos.items() if k != "plan"}
+                      if res.chaos else None),
+            "parity_ok": parity_ok,
+        }
+
+    clean_row = row("concurrent_tcp_clean", res_cl, wall_cl, t_cl)
+    degraded_row = row("chaos_degraded_tcp", res_dg, wall_dg, t_dg)
+    return clean_row, degraded_row, slowdown, parity_ok
 
 
 def _cached_portfolio_shootout(n_searches: int, n_hosts: int, m: int,
@@ -914,6 +1001,35 @@ def run(out_dir=None, n_stars=8_000, smoke: bool = False,
              f"info_only;server_s={srv_row['wall_s']:.3f};"
              f"batched_s={sv_bt['wall_s']:.3f}")
 
+    # -- degraded-mode row: concurrent TCP under chaos (DESIGN.md §12) -------
+    if section("chaos_server"):
+        # sized below the server row: every message crosses a real socket
+        # from CHAOS_CLIENTS client threads, and the degraded leg retries
+        # ~15% of them through the backoff schedule
+        if smoke:
+            ch_hosts, ch_stars, ch_m, ch_iters = 128, 300, 16, 2
+        else:
+            ch_hosts, ch_stars, ch_m, ch_iters = 256, 400, 24, 2
+        chc_row, chd_row, ch_slowdown, ch_parity_ok = \
+            _chaos_degraded_row(ch_hosts, ch_stars, ch_m, ch_iters)
+        results["chaos_degraded"] = {
+            "n_hosts": ch_hosts, "clients": CHAOS_CLIENTS,
+            "clean": chc_row, "degraded": chd_row,
+            "degraded_vs_clean_wall_ratio": ch_slowdown}
+        emit(f"scal_chaos_clean_tcp_{ch_hosts}", chc_row["wall_s"] * 1e6,
+             f"m={ch_m};clients={CHAOS_CLIENTS};"
+             f"msgs={chc_row['messages']};"
+             f"p99_ms={chc_row['request_p99_ms']:.2f}")
+        emit(f"scal_chaos_degraded_{ch_hosts}", chd_row["wall_s"] * 1e6,
+             f"m={ch_m};thr={chd_row['throughput_msg_s']:.0f}/s;"
+             f"p99_ms={chd_row['request_p99_ms']:.2f};"
+             f"retries={chd_row['chaos']['retries']};"
+             f"parity={'ok' if ch_parity_ok else 'FAIL'}")
+        emit(f"scal_chaos_slowdown_{ch_hosts}", ch_slowdown,
+             f"target<={CHAOS_MAX_SLOWDOWN}x;"
+             f"clean_s={chc_row['wall_s']:.3f};"
+             f"degraded_s={chd_row['wall_s']:.3f}")
+
     # -- LM-loss workload: the model stack as the fitness (DESIGN.md §11) ----
     if section("lm_subspace"):
         # smoke matches the CI dryrun scale; full matches examples/anm_lm.py
@@ -955,7 +1071,8 @@ def run(out_dir=None, n_stars=8_000, smoke: bool = False,
             ledger = {}
         ledger["smoke" if smoke else "full"] = {
             "rows": [ev, bt, pod, sync_row, pipe_row, ser_row, co_row,
-                     cpo_row, cpw_row, wr_row, srv_row, lm_sync, lm_pipe],
+                     cpo_row, cpw_row, wr_row, srv_row, chc_row, chd_row,
+                     lm_sync, lm_pipe],
             "speedups": {
                 "batched_vs_per_event": speedup,
                 "pod_sharding_overhead": pod_overhead,
@@ -965,6 +1082,7 @@ def run(out_dir=None, n_stars=8_000, smoke: bool = False,
                 "cached_portfolio_warm_vs_off": cp_speedup,
                 "server_overhead_vs_per_event": srv_overhead,
                 "server_vs_batched_wall_ratio": srv_vs_batched,
+                "chaos_degraded_vs_clean_wall_ratio": ch_slowdown,
                 "lm_subspace_pipelined_vs_sync_ratio": lm_ratio,
             },
             "parity": {"pod_mesh": pod_parity_ok,
@@ -973,6 +1091,7 @@ def run(out_dir=None, n_stars=8_000, smoke: bool = False,
                        "cached_portfolio": cp_parity_ok,
                        "warm_restart": wr_ok,
                        "server_determinism": srv_det_ok,
+                       "chaos_degraded": ch_parity_ok,
                        "lm_subspace": lm_parity_ok,
                        "lm_zero_compiles": lm_compiles_ok},
             "platform": _platform_meta(),
@@ -1053,6 +1172,19 @@ def run(out_dir=None, n_stars=8_000, smoke: bool = False,
                 f"{srv_row['wall_s']:.3f}s vs event "
                 f"{sv_ev['wall_s']:.3f}s) — service overhead above the "
                 f"{SRV_MAX_OVERHEAD}x ceiling")
+    if section("chaos_server"):
+        if not ch_parity_ok:
+            raise RuntimeError(
+                "a concurrent/degraded run diverged from the serial "
+                "fault-free baseline — the sequenced intake must replay "
+                "every arrival interleaving and fault schedule to the "
+                "same committed iterates (DESIGN.md §12)")
+        if ch_slowdown > CHAOS_MAX_SLOWDOWN:
+            raise RuntimeError(
+                f"degraded-mode service took {ch_slowdown:.2f}x the clean "
+                f"concurrent wall (degraded {chd_row['wall_s']:.3f}s vs "
+                f"clean {chc_row['wall_s']:.3f}s) — above the "
+                f"{CHAOS_MAX_SLOWDOWN}x ceiling")
     if section("lm_subspace"):
         if not lm_parity_ok:
             raise RuntimeError(

@@ -1,6 +1,6 @@
-"""The fault-tolerant FGDO service layer, end to end (DESIGN.md §9).
+"""The fault-tolerant FGDO service layer, end to end (DESIGN.md §9, §12).
 
-Three acts over one seeded 8-parameter SDSS-stream search:
+Four acts over one seeded 8-parameter SDSS-stream search:
 
   1. serve it: a loopback work server (real framed protocol messages,
      host registry, deadline leases) drives a simulated 128-host volunteer
@@ -13,10 +13,16 @@ Three acts over one seeded 8-parameter SDSS-stream search:
      re-leased in-flight points it already paid for are served from the
      cache instead of re-evaluated (DESIGN.md §10);
   3. go over TCP: the identical search through real sockets on
-     127.0.0.1, which must match the loopback trajectory exactly.
+     127.0.0.1, which must match the loopback trajectory exactly;
+  4. break the network: 8 truly concurrent TCP client threads behind
+     the sequenced intake, with a seeded ``FaultPlan`` dropping,
+     duplicating, delaying, resetting, and tearing frames mid-write —
+     retries + (host_id, client_seq) idempotency absorb every fault
+     and the trajectory STILL matches act 1 bit-for-bit (DESIGN.md
+     §12).
 
     PYTHONPATH=src python examples/fgdo_service.py
-    PYTHONPATH=src python examples/fgdo_service.py --act 2
+    PYTHONPATH=src python examples/fgdo_service.py --act 4
 """
 import argparse
 import tempfile
@@ -26,6 +32,7 @@ from repro.core.engine import identical_trajectories
 from repro.core.substrates.eval_backend import InProcessEvalBackend
 from repro.core.substrates.eval_cache import EvalCache, JsonlCacheStore
 from repro.server import protocol
+from repro.server.chaos import FaultPlan
 from repro.server.checkpoint import eval_cache_path
 from repro.server.sim import ServerSubstrate, SimulatedCrash, smoke_problem
 from repro.server.transport import LoopbackTransport
@@ -33,7 +40,7 @@ from repro.server.transport import LoopbackTransport
 
 def main():
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("--act", type=int, default=0, choices=[0, 1, 2, 3],
+    ap.add_argument("--act", type=int, default=0, choices=[0, 1, 2, 3, 4],
                     help="run one act (0 = all)")
     args = ap.parse_args()
 
@@ -108,6 +115,34 @@ def main():
         print(f"  {tcp.pool.messages} frames over 127.0.0.1 in "
               f"{time.time() - t0:.1f}s; bit-identical to loopback: {same}")
         assert same, "TCP trajectory diverged from loopback"
+
+    if args.act in (0, 4):
+        print("== act 4: 8 concurrent clients through a hostile network ==")
+        # a composite schedule: every fault category the transport can
+        # inject, all at once, on a recorded seed
+        plan = FaultPlan(seed=4242, drop_request=0.06, drop_reply=0.04,
+                         duplicate=0.08, delay=0.15, delay_ms=1.5,
+                         torn_write=0.03, reset=0.03)
+        t0 = time.time()
+        res = ServerSubstrate(spec, fleet, backend, transport="tcp",
+                              concurrent=8, chaos=plan).run()
+        same = (identical_trajectories(eng, res.engines[0])
+                and eng.stats == res.engines[0].stats)
+        ch, ik = res.chaos, res.intake
+        print(f"  faults injected: {ch['drops_request']}+"
+              f"{ch['drops_reply']} drops, {ch['duplicates']} dups, "
+              f"{ch['delays']} delays, {ch['resets']} resets, "
+              f"{ch['torn_writes']} torn writes -> {ch['retries']} "
+              f"retries in {time.time() - t0:.1f}s")
+        print(f"  intake: {ik['next_seq']} stamps admitted in canonical "
+              f"order, {ik['parked']} early arrivals parked, "
+              f"{ik['out_of_band']} late duplicates absorbed")
+        c = res.server.counters
+        print(f"  idempotency: {c.duplicates_suppressed} replies served "
+              f"from cache, {c.stale_duplicates} stale dups refused, "
+              f"{c.duplicate_reports} lapsed-lease re-reports ignored")
+        print(f"  trajectory bit-identical to the clean serial run: {same}")
+        assert same, "chaos run diverged from the fault-free baseline"
 
     # a peek through the protocol's monitoring message, for flavor
     srv = base.server

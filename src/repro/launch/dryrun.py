@@ -870,6 +870,204 @@ def run_server_smoke(out_dir: str, n_hosts: int = 160, m: int = 24,
     return ok
 
 
+def run_chaos_server_smoke(out_dir: str, n_hosts: int = 48, m: int = 12,
+                           iterations: int = 3, n_stars: int = 200,
+                           n_clients: int = 8) -> bool:
+    """Chaos-hardened work-service smoke (``--substrate chaos_server``,
+    DESIGN.md §12).
+
+    The seeded smoke search runs once serially on loopback with no faults
+    (the baseline), then repeatedly as ``n_clients`` truly concurrent TCP
+    clients — clean, and under each of three seeded ``FaultPlan`` presets
+    (drops + duplication, reordering delay, resets + torn writes) — every
+    time in a clean single-device CPU subprocess.  The hard gate is the
+    tentpole contract: bit-identical committed iterates and identical
+    final engine stats vs the fault-free serial baseline, with the fault
+    counters proving the schedule actually injected.  Two more legs:
+
+      * a SIGKILL mid-chaos (concurrent TCP + reset_torn), restored from
+        snapshot + replay log and run to completion → must equal the
+        baseline;
+      * an in-parent concurrent+chaos run evaluating through the REAL
+        16×16 production-mesh backend on the forced 512-device platform —
+        fault tolerance and the production partitioning composed.
+
+    Writes artifacts/dryrun/substrate_chaos_server.json; returns pass/fail.
+    """
+    import shutil
+    import signal
+    import subprocess
+    import sys
+    import tempfile
+
+    child_env = {k: v for k, v in os.environ.items() if k != "XLA_FLAGS"}
+    child_env["JAX_PLATFORMS"] = "cpu"
+    src_dir = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                           ".."))
+    child_env["PYTHONPATH"] = src_dir + (
+        ":" + child_env["PYTHONPATH"] if child_env.get("PYTHONPATH") else "")
+    spec_args = ["--n-hosts", str(n_hosts), "--m", str(m),
+                 "--iterations", str(iterations), "--n-stars", str(n_stars)]
+    conc_args = ["--transport", "tcp", "--concurrent", str(n_clients)]
+
+    def child(extra, timeout=600):
+        cmd = [sys.executable, "-m", "repro.server.sim"] + spec_args + extra
+        return subprocess.run(cmd, env=child_env, timeout=timeout,
+                              capture_output=True, text=True)
+
+    def load(path):
+        with open(path) as f:
+            return json.load(f)
+
+    def trajectories_equal(a, b):
+        return (a["history"] == b["history"]
+                and a["iteration"] == b["iteration"]
+                and a["best_fitness"] == b["best_fitness"]
+                and a["engine_stats"] == b["engine_stats"])
+
+    tmp = tempfile.mkdtemp(prefix="chaos_smoke_")
+    report = {"n_hosts": n_hosts, "m": m, "iterations": iterations,
+              "n_clients": n_clients}
+    ok = True
+    try:
+        base_path = os.path.join(tmp, "base.json")
+        r = child(["--out", base_path])
+        if r.returncode != 0:
+            print(r.stdout + r.stderr)
+            raise RuntimeError("serial baseline child failed")
+        base = load(base_path)
+
+        # clean concurrency first: the intake + release machinery alone
+        clean_path = os.path.join(tmp, "concurrent.json")
+        r = child([*conc_args, "--out", clean_path])
+        if r.returncode != 0:
+            print(r.stdout + r.stderr)
+            raise RuntimeError("concurrent clean child failed")
+        clean = load(clean_path)
+        concurrent_ok = (trajectories_equal(base, clean)
+                         and clean["intake"]["parked"] > 0)
+        report["concurrent_clean"] = {
+            "trajectory_equal": trajectories_equal(base, clean),
+            "intake": clean["intake"], "ok": concurrent_ok}
+
+        # the three seeded fault schedules
+        plans = {}
+        for preset in ("drop_dup", "reorder_delay", "reset_torn"):
+            p_path = os.path.join(tmp, f"{preset}.json")
+            r = child([*conc_args, "--chaos", preset, "--out", p_path])
+            if r.returncode != 0:
+                print(r.stdout + r.stderr)
+                plans[preset] = {"ok": False, "error": "child failed"}
+                ok = False
+                continue
+            doc = load(p_path)
+            ch = doc["chaos"]
+            injected = (ch["drops_request"] + ch["drops_reply"]
+                        + ch["duplicates"] + ch["delays"] + ch["resets"]
+                        + ch["torn_writes"])
+            p_ok = trajectories_equal(base, doc) and injected > 0
+            plans[preset] = {
+                "trajectory_equal": trajectories_equal(base, doc),
+                "faults_injected": injected,
+                "chaos": {k: v for k, v in ch.items() if k != "plan"},
+                "ok": p_ok}
+            ok = ok and p_ok
+        report["fault_plans"] = plans
+
+        # SIGKILL mid-chaos + restore under the same plan
+        ckpt = os.path.join(tmp, "ckpt_chaos")
+        kill_args = [*conc_args, "--chaos", "reset_torn", "--ckpt-dir",
+                     ckpt, "--snapshot-every", "150", "--throttle-s",
+                     "0.002"]
+        proc = subprocess.Popen(
+            [sys.executable, "-m", "repro.server.sim", *spec_args,
+             *kill_args],
+            env=child_env, stdout=subprocess.PIPE, stderr=subprocess.PIPE)
+        log_path = os.path.join(ckpt, "replay.jsonl")
+        deadline = time.time() + 300
+        killed_mid_run = False
+        kill_after = max(150, int(0.4 * base["pool"]["messages"]))
+        while time.time() < deadline:
+            if proc.poll() is not None:
+                break
+            has_snap = os.path.isdir(ckpt) and any(
+                f.startswith("snapshot_") for f in os.listdir(ckpt))
+            log_lines = 0
+            if os.path.exists(log_path):
+                with open(log_path, "rb") as f:
+                    log_lines = f.read().count(b"\n")
+            if has_snap and log_lines >= kill_after:
+                proc.send_signal(signal.SIGKILL)
+                proc.wait(timeout=30)
+                killed_mid_run = True
+                break
+            time.sleep(0.02)
+        if not killed_mid_run:
+            proc.kill()
+            report["kill_restore"] = {"killed_mid_run": False, "ok": False}
+            ok = False
+        else:
+            out_path = os.path.join(tmp, "resume_chaos.json")
+            r = child([*kill_args, "--resume", "--out", out_path])
+            if r.returncode != 0:
+                print(r.stdout + r.stderr)
+                report["kill_restore"] = {"killed_mid_run": True,
+                                          "ok": False,
+                                          "error": "resume child failed"}
+                ok = False
+            else:
+                res = load(out_path)
+                k_ok = (trajectories_equal(base, res)
+                        and not res["recovered_done"])
+                report["kill_restore"] = {
+                    "killed_mid_run": True,
+                    "recovered_done": res["recovered_done"],
+                    "replayed": res["replayed"],
+                    "resumed_leases": res["pool"]["resumed_leases"],
+                    "trajectory_equal": trajectories_equal(base, res),
+                    "ok": k_ok}
+                ok = ok and k_ok
+
+        # in-parent: concurrent + chaos over the REAL production mesh on
+        # the forced 512-device platform
+        from repro.core.substrates.pod_mesh import PodMeshEvalBackend
+        from repro.server.sim import (ServerSubstrate, result_doc,
+                                      smoke_problem)
+        spec, fleet, f_batch = smoke_problem(
+            n_stars=n_stars, n_hosts=n_hosts, m=m, iterations=iterations)
+        mesh_backend = PodMeshEvalBackend(f_batch,
+                                          mesh=make_production_mesh())
+        mesh_doc = result_doc(ServerSubstrate(
+            spec, fleet, mesh_backend, transport="tcp",
+            concurrent=n_clients, chaos="drop_dup").run())
+        mesh_ok = trajectories_equal(base, mesh_doc)
+        report["production_mesh_chaos"] = {
+            "trajectory_equal": mesh_ok,
+            "chaos": {k: v for k, v in mesh_doc["chaos"].items()
+                      if k != "plan"},
+            "ok": mesh_ok}
+        ok = ok and concurrent_ok and mesh_ok
+    except Exception as e:  # noqa: BLE001 — smoke must report, not die
+        report["error"] = str(e)
+        ok = False
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+    report["parity_ok"] = ok
+    path = os.path.join(out_dir, "substrate_chaos_server.json")
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2)
+    fp = report.get("fault_plans", {})
+    print(f"[{'ok' if ok else 'FAIL'}] substrate chaos_server: "
+          f"concurrent={report.get('concurrent_clean', {}).get('ok')} "
+          f"drop_dup={fp.get('drop_dup', {}).get('ok')} "
+          f"reorder={fp.get('reorder_delay', {}).get('ok')} "
+          f"reset_torn={fp.get('reset_torn', {}).get('ok')} "
+          f"kill={report.get('kill_restore', {}).get('ok')} "
+          f"mesh={report.get('production_mesh_chaos', {}).get('ok')} "
+          f"-> {path}")
+    return ok
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)

@@ -60,6 +60,14 @@ SUBSTRATES: Dict[str, SubstrateSmoke] = {
         "transports, SIGKILLed mid-search and restored from snapshot + "
         "replay log; restored run bit-identical to uninterrupted",
         "repro.launch.dryrun:run_server_smoke"),
+    "chaos_server": SubstrateSmoke(
+        "chaos_server",
+        "chaos-hardened work service: concurrent TCP clients behind the "
+        "sequenced intake under seeded fault plans (drops, duplicates, "
+        "delays, resets, torn writes) incl. SIGKILL mid-chaos restore "
+        "and the production-mesh backend; every run bit-identical to the "
+        "fault-free serial baseline",
+        "repro.launch.dryrun:run_chaos_server_smoke"),
 }
 
 

@@ -227,6 +227,12 @@ class CheckpointManager:
     def record(self, msg: dict, server) -> None:
         if msg.get("kind") in self.READ_ONLY:
             return
+        if not getattr(server, "last_applied", True):
+            # the dedup layer absorbed this delivery (duplicate/stale cs):
+            # it mutated nothing, and logging it would make the replay log
+            # depend on the fault schedule — the log must stay exactly the
+            # canonical applied-message sequence (DESIGN.md §12)
+            return
         self.seq += 1
         self._log.append({"seq": self.seq, "msg": msg})
         if self.seq % self.snapshot_every == 0:

@@ -140,25 +140,48 @@ class FrameDecoder:
 
 
 # -- message builders (clients) ----------------------------------------------
+#
+# ``cs`` is the per-host client sequence number — the idempotency key
+# (host_id, cs) the server dedups retried/duplicated deliveries on, echoed
+# back in the reply so a client can match replies to requests on a stream
+# that may carry duplicates.  ``seq`` is the global intake stamp a
+# concurrent pool's coordinator assigns at release time; the server's
+# sequenced intake handles messages in stamp order regardless of arrival
+# interleaving.  Both are optional — a bare client (or the serial pool's
+# pre-PR-8 wire traffic) stays valid.
 
-def register(host_id: int, now: float) -> dict:
-    return {"kind": "register", "host_id": int(host_id), "now": float(now)}
+def _stamp(msg: dict, cs: Optional[int], seq: Optional[int]) -> dict:
+    if cs is not None:
+        msg["cs"] = int(cs)
+    if seq is not None:
+        msg["intake_seq"] = int(seq)
+    return msg
 
 
-def request_work(host_id: int, now: float) -> dict:
-    return {"kind": "request_work", "host_id": int(host_id),
-            "now": float(now)}
+def register(host_id: int, now: float, cs: Optional[int] = None,
+             seq: Optional[int] = None) -> dict:
+    return _stamp({"kind": "register", "host_id": int(host_id),
+                   "now": float(now)}, cs, seq)
+
+
+def request_work(host_id: int, now: float, cs: Optional[int] = None,
+                 seq: Optional[int] = None) -> dict:
+    return _stamp({"kind": "request_work", "host_id": int(host_id),
+                   "now": float(now)}, cs, seq)
 
 
 def report_result(host_id: int, search: int, wu: int, y: float,
-                  now: float) -> dict:
-    return {"kind": "report_result", "host_id": int(host_id),
-            "search": int(search), "wu": int(wu), "y": float(y),
-            "now": float(now)}
+                  now: float, cs: Optional[int] = None,
+                  seq: Optional[int] = None) -> dict:
+    return _stamp({"kind": "report_result", "host_id": int(host_id),
+                   "search": int(search), "wu": int(wu), "y": float(y),
+                   "now": float(now)}, cs, seq)
 
 
-def heartbeat(host_id: int, now: float) -> dict:
-    return {"kind": "heartbeat", "host_id": int(host_id), "now": float(now)}
+def heartbeat(host_id: int, now: float, cs: Optional[int] = None,
+              seq: Optional[int] = None) -> dict:
+    return _stamp({"kind": "heartbeat", "host_id": int(host_id),
+                   "now": float(now)}, cs, seq)
 
 
 def shutdown(now: float) -> dict:

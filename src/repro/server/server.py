@@ -35,6 +35,8 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import json
+import threading
+import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -45,6 +47,68 @@ from repro.server import protocol
 from repro.server.registry import HostRegistry
 
 RUNNING, DONE, KILLED = "running", "done", "killed"
+
+
+class SequencedIntake:
+    """Reorder buffer at the transport boundary (DESIGN.md §12).
+
+    Concurrent connections deliver messages in whatever order the network
+    produces; the coordinator that RELEASED them stamped each with a
+    global monotone ``intake_seq``.  ``submit`` parks an early arrival
+    until every lower stamp has been handled, so the handler — and hence
+    the replay log, the engines, and the committed iterates — observes
+    the canonical total order no matter the arrival interleaving.  The
+    handler runs under the intake lock: the work server stays the
+    single-threaded deterministic object it always was, and this class is
+    the ONLY concurrency-aware thing in front of it.
+
+    Deliveries of an already-handled stamp (retries and duplicated
+    frames racing their original) are handled immediately instead of
+    parked — the server's (host, cs) idempotency layer turns them into
+    cached-reply no-ops, so their out-of-band timing is invisible.
+
+    Unstamped messages (a serial client, a monitoring probe) are handled
+    at arrival under the same lock WITHOUT consuming a stamp — serial
+    traffic flows through untouched and a mid-run status poll can never
+    desync the stamped stream, so intake sequencing is strictly additive.
+    """
+
+    def __init__(self, handler, timeout: float = 120.0):
+        self._handler = handler
+        self._cond = threading.Condition()
+        self._next = 0
+        self.timeout = timeout            # generous: a gap means a bug, and
+        self.parked = 0                   # a loud ProtocolError beats a hang
+        self.out_of_band = 0
+
+    @property
+    def next_seq(self) -> int:
+        return self._next
+
+    def submit(self, msg: dict) -> dict:
+        with self._cond:
+            seq = msg.get("intake_seq")
+            if seq is None:
+                return self._handler(msg)
+            seq = int(seq)
+            if seq > self._next:
+                self.parked += 1
+                deadline = time.monotonic() + self.timeout
+                while seq > self._next:
+                    left = deadline - time.monotonic()
+                    if left <= 0:
+                        raise protocol.ProtocolError(
+                            f"intake gap: stamp {seq} waited "
+                            f"{self.timeout:.0f}s at next={self._next} — a "
+                            f"released message never arrived")
+                    self._cond.wait(left)
+            if seq < self._next:
+                self.out_of_band += 1
+                return self._handler(msg)
+            rep = self._handler(msg)
+            self._next = seq + 1
+            self._cond.notify_all()
+            return rep
 
 
 @dataclasses.dataclass
@@ -69,6 +133,9 @@ class ServerCounters:
     dropped_results: int = 0          # result for a killed search
     nowork_replies: int = 0
     heartbeats: int = 0
+    duplicates_suppressed: int = 0    # same (host, cs) again: cached reply
+    stale_duplicates: int = 0         # cs older than the host's last applied
+    duplicate_reports: int = 0        # re-report of already-settled work
 
 
 @dataclasses.dataclass
@@ -125,6 +192,22 @@ class WorkServer:
         self._last_sweep = float("-inf")
         self.sweep_interval = 5.0     # virtual seconds between churn sweeps
         self._cache_status = None     # read-only eval-cache probe (attach)
+        # idempotency layer (DESIGN.md §12): per-host last applied client
+        # sequence number + the reply it produced.  Clients are serial per
+        # host (one logical message in flight), so a window of 1 is exact:
+        # any retransmission is of the host's LATEST message.  Part of
+        # state_dict — a restored server keeps deduplicating mid-retry.
+        self._client_seq: Dict[int, int] = {}
+        self._last_reply: Dict[int, dict] = {}
+        # last settled (search, wu) per host: a re-reported result whose
+        # lease records are already gone is recognized as a benign
+        # retransmit instead of protocol misuse, and can never touch the
+        # registry's returned count twice
+        self._settled: Dict[int, Tuple[int, int]] = {}
+        # False when the last handle() call was absorbed by the dedup
+        # layer (or was read-only): the checkpoint layer skips logging it,
+        # so the replay log stays exactly the canonical applied sequence
+        self.last_applied = True
 
     def attach_cache(self, cache) -> None:
         """Surface an ``EvalCache``'s counters in the read-only ``status``
@@ -232,8 +315,47 @@ class WorkServer:
         if kind == "status":
             # read-only by contract: not counted, not logged, no sweep —
             # a monitoring poll must never perturb the replayable state
+            self.last_applied = False
             return self._status()
+        # idempotent delivery: before ANY state is touched (including the
+        # message counter), a (host, cs) the server already applied short-
+        # circuits to the cached reply — a retried report can't re-vote, a
+        # duplicated request can't re-abandon or double-lease, and the
+        # suppressed delivery never reaches the replay log
+        cs, host = msg.get("cs"), msg.get("host_id")
+        keyed = cs is not None and host is not None
+        if keyed:
+            cs, host = int(cs), int(host)
+            last = self._client_seq.get(host, -1)
+            if cs == last:
+                self.last_applied = False
+                self.counters.duplicates_suppressed += 1
+                return dict(self._last_reply[host])
+            if cs < last:
+                # older than the last applied message: with serial-per-
+                # host clients this is a stray duplicate of a reply the
+                # client already consumed — refuse rather than guess (cs
+                # still echoed so a reply-matching client isn't stranded)
+                self.last_applied = False
+                self.counters.stale_duplicates += 1
+                rep = protocol.error_reply(
+                    f"stale duplicate: host {host} cs={cs} already past "
+                    f"{last}")
+                rep["cs"], rep["host_id"] = cs, host
+                return rep
+        self.last_applied = True
         self.counters.messages += 1
+        rep = self._dispatch(kind, msg)
+        if keyed:
+            # (host_id, cs) is the client's reply-matching key — cs alone
+            # is ambiguous on a connection multiplexing several hosts
+            rep = dict(rep)
+            rep["cs"], rep["host_id"] = cs, host
+            self._client_seq[host] = cs
+            self._last_reply[host] = rep
+        return rep
+
+    def _dispatch(self, kind: str, msg: dict) -> dict:
         if kind == "register":
             return self._register(msg)
         if kind == "request_work":
@@ -315,7 +437,15 @@ class WorkServer:
         self._drop_lapsed_for(host)
         e = self.searches[search] if 0 <= search < len(self.searches) \
             else None
-        if lease is None or e is None:
+        if lease is None and self._settled.get(host) == key:
+            # the host re-reported work this server already settled (its
+            # first report raced a lapse, or an ack was lost below the cs
+            # window) — a benign retransmit, NOT protocol misuse, and it
+            # must never reach registry.on_result: ``returned`` (the
+            # reliability numerator) counts each workunit at most once
+            self.counters.duplicate_reports += 1
+            self.registry.touch(host, now)
+        elif lease is None or e is None:
             # no lease on record: without the workunit payload there is
             # nothing safe to assimilate — count and acknowledge
             self.counters.unknown_results += 1
@@ -333,6 +463,8 @@ class WorkServer:
                 e.status = DONE
             if self.policy == "portfolio":
                 self._apply_portfolio()
+        if lease is not None:
+            self._settled[host] = key
         _, best_y = self.best()
         iteration = (e.fgdo.engine.iteration if e is not None
                      else 0)
@@ -395,13 +527,18 @@ class WorkServer:
             "leases": [lease_doc(l) for l in self.leases.values()],
             "lapsed": [lease_doc(l) for l in self.lapsed.values()],
             "hosts": [{"host_id": h, "state": r.state,
-                       "next_contact_at": r.next_contact_at}
+                       "next_contact_at": r.next_contact_at,
+                       # the host's last applied cs: a resumed client pool
+                       # continues its per-host counters from here, so the
+                       # regenerated future traffic carries the same
+                       # idempotency keys as the uninterrupted run's
+                       "client_seq": self._client_seq.get(h, -1)}
                       for h, r in self.registry.hosts.items()],
         }
 
     def state_dict(self) -> dict:
         return {
-            "v": 1,
+            "v": 2,
             "now": self.now, "cursor": self.cursor,
             "stopping": self.stopping,
             "counters": dataclasses.asdict(self.counters),
@@ -411,6 +548,11 @@ class WorkServer:
                          for e in self.searches],
             "leases": [self._lease_state(l) for l in self.leases.values()],
             "lapsed": [self._lease_state(l) for l in self.lapsed.values()],
+            # v2: the idempotency layer survives the crash — a retry that
+            # straddles a restore must still deduplicate
+            "client_seq": {str(h): c for h, c in self._client_seq.items()},
+            "last_reply": {str(h): r for h, r in self._last_reply.items()},
+            "settled": {str(h): list(k) for h, k in self._settled.items()},
         }
 
     @staticmethod
@@ -460,4 +602,12 @@ class WorkServer:
             l = self._lease_from_state(ld)
             self.lapsed[(l.search_id, l.wu_id)] = l
             self._host_lapsed[l.host_id] = (l.search_id, l.wu_id)
+        # v2 fields absent from a v1 snapshot default empty (the replayed
+        # suffix then rebuilds whatever dedup state its messages carry)
+        self._client_seq = {int(h): int(c)
+                            for h, c in d.get("client_seq", {}).items()}
+        self._last_reply = {int(h): dict(r)
+                            for h, r in d.get("last_reply", {}).items()}
+        self._settled = {int(h): (int(k[0]), int(k[1]))
+                         for h, k in d.get("settled", {}).items()}
         self._last_sweep = float("-inf")

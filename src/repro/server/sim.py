@@ -26,9 +26,24 @@ on-device malicious-corruption lanes) the first time any of them is
 needed, which is what keeps the loopback server within striking distance
 of the direct batched grid in the benchmark overhead row.
 
+``ConcurrentClientPool`` is the same fleet with the serialization removed
+(DESIGN.md §12): a coordinator thread owns the canonical virtual-time
+heap and assigns each message a global **intake stamp at release time, in
+canonical order**, while worker threads — each with its own REAL
+connection — deliver them concurrently (optionally through the chaos
+fault injector).  Release is governed by a lower-bound rule: the heap
+minimum is released only once it provably sorts before every in-flight
+host's earliest possible FOLLOW-UP event, so the stamp order equals the
+serial pool's processing order exactly.  The server's sequenced intake
+then handles arrivals in stamp order, and (host, cs) idempotency absorbs
+retries/duplicates — which is why N racing connections under a seeded
+fault schedule still commit bit-identical iterates to the serial
+fault-free baseline.
+
 ``ServerSubstrate`` wires it all together: build (or recover) a
-``WorkServer``, attach the checkpoint manager, start a transport, run the
-pool to completion.  ``python -m repro.server.sim`` runs a seeded
+``WorkServer``, attach the checkpoint manager, start a transport (with
+``concurrent``/``chaos``, a sequenced intake and/or fault-plan wrapper),
+run the pool to completion.  ``python -m repro.server.sim`` runs a seeded
 single-search smoke — the dryrun kill/restore harness launches it as a
 subprocess, SIGKILLs it mid-search, and relaunches with ``--resume``.
 """
@@ -36,6 +51,8 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import queue
+import threading
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -46,8 +63,9 @@ from repro.core.orchestrator.director import SearchSpec
 from repro.core.substrates.eval_backend import EvalBackend
 from repro.core.substrates.eval_cache import CachingSubmitter, EvalCache
 from repro.server import protocol
+from repro.server.chaos import ChaosTransport, FaultPlan, PRESETS
 from repro.server.checkpoint import CheckpointManager
-from repro.server.server import WorkServer
+from repro.server.server import SequencedIntake, WorkServer
 from repro.server.transport import make_transport
 
 PRIO_COMPLETE, PRIO_REQUEST = 0, 1
@@ -117,6 +135,11 @@ class SimClientPool:
         self._registered: set = set()
         self._stopped: set = set()
         self._seeded = False          # resume_from pre-seeded the schedule
+        # per-host client sequence counters — the idempotency keys every
+        # message carries (serial traffic too, so the wire is uniform);
+        # after a resume they continue from the server's last applied cs
+        self._cs: Dict[int, int] = {}
+        self.request_wall: List[float] = []   # request_work round-trip walls
 
     # -- crash-restore rebuild ----------------------------------------------
 
@@ -147,6 +170,10 @@ class SimClientPool:
             self.stats.resumed_leases += 1
         for rec in world["hosts"]:
             h = int(rec["host_id"])
+            # cs continuity: the resumed fleet keeps counting from the
+            # server's last applied message per host, so its traffic can
+            # never collide with (or be deduplicated against) the prefix
+            self._cs[h] = int(rec.get("client_seq", -1)) + 1
             if h in leased or rec["next_contact_at"] is None:
                 continue
             self._registered.add(h)
@@ -187,13 +214,22 @@ class SimClientPool:
 
     # -- the virtual-time loop ----------------------------------------------
 
+    def _next_cs(self, h: int) -> int:
+        c = self._cs.get(h, 0)
+        self._cs[h] = c + 1
+        return c
+
     def _call(self, conn, msg: dict) -> dict:
         if self.max_messages is not None and \
                 self.stats.messages >= self.max_messages:
             raise SimulatedCrash(
                 f"simulated crash after {self.stats.messages} messages")
         self.stats.messages += 1
-        return conn.call(msg)
+        t0 = time.perf_counter()
+        rep = conn.call(msg)
+        if msg.get("kind") == "request_work":
+            self.request_wall.append(time.perf_counter() - t0)
+        return rep
 
     def run(self, conn) -> PoolStats:
         cfg = self.cfg
@@ -209,9 +245,11 @@ class SimClientPool:
             self.stats.sim_time = max(self.stats.sim_time, t)
             if prio == PRIO_REQUEST:
                 if h not in self._registered:
-                    self._call(conn, protocol.register(h, t))
+                    self._call(conn,
+                               protocol.register(h, t, cs=self._next_cs(h)))
                     self._registered.add(h)
-                rep = self._call(conn, protocol.request_work(h, t))
+                rep = self._call(
+                    conn, protocol.request_work(h, t, cs=self._next_cs(h)))
                 if rep["kind"] == "work":
                     self.stats.work_received += 1
                     wu = int(rep["wu"])
@@ -242,12 +280,243 @@ class SimClientPool:
                 y = self._value(inf.search, inf.wu)  # batches all in-flight
                 del self._inflight[h]
                 rep = self._call(conn, protocol.report_result(
-                    h, inf.search, inf.wu, y, t))
+                    h, inf.search, inf.wu, y, t, cs=self._next_cs(h)))
                 self.stats.results_reported += 1
                 if rep.get("done"):
                     done = True       # engines sealed; drain and stop
                 else:
                     heapq.heappush(self._events, (t, PRIO_REQUEST, h))
+        return self.stats
+
+
+class ConcurrentClientPool(SimClientPool):
+    """The same deterministic fleet, delivered by racing threads.
+
+    A coordinator (the calling thread) pops the canonical virtual-time
+    heap and RELEASES each event: it stamps the event's messages with
+    consecutive global intake sequence numbers and hands them to one of
+    ``n_workers`` worker threads (hosts are multiplexed host→worker, so a
+    host's own messages stay ordered on one connection) which deliver
+    them over real, concurrently racing connections.  Determinism is by
+    construction, not by luck:
+
+      * stamps are assigned at RELEASE time in canonical heap order, and
+        the server's ``SequencedIntake`` handles messages in stamp order
+        — so the applied sequence is the serial pool's sequence no matter
+        how arrivals interleave (or how chaos delays/duplicates them);
+      * the heap minimum ``e`` is released only when ``e`` sorts before
+        every in-flight host's earliest possible follow-up event (a
+        completion's follow-up request lands at the same virtual time;
+        a request's earliest follow-up is bounded by the minimum
+        latency-noise completion and the minimum no-work retry), so no
+        event that the serial order would process before ``e`` can still
+        be created by an outstanding reply;
+      * replies only ever touch the reporting host's own schedule, so
+        absorbing them as they arrive (in any order) commutes.
+
+    Fitness values are computed by the coordinator at completion-release
+    time through the same lazily-batched ``_value`` — the backend stays
+    single-threaded, and row-independence makes batch composition
+    value-neutral.  ``max_messages`` counts RELEASED messages, so the
+    simulated-crash point is deterministic here too; because the server
+    applies a stamp-prefix of the released sequence, the crashed state is
+    always a canonical prefix and ``resume_from`` replays the same
+    future.
+    """
+
+    #: generous safety net — a stuck reply means a real bug (or an
+    #: exhausted chaos retry budget), and a loud error beats a hang
+    REPLY_TIMEOUT = 120.0
+
+    def __init__(self, cfg: GridConfig, backend: EvalBackend,
+                 max_messages: Optional[int] = None, n_workers: int = 8):
+        super().__init__(cfg, backend, max_messages=max_messages)
+        self.n_workers = max(1, int(n_workers))
+        self.next_stamp = 0
+        self._crash: Optional[BaseException] = None
+        self._done = False
+
+    # -- release machinery ---------------------------------------------------
+
+    def _follow_lb(self, t: float, prio: int, h: int):
+        """Strict lower bound on the follow-up event an in-flight
+        (t, prio, h) can push when its reply lands."""
+        if prio == PRIO_COMPLETE:
+            # a report's follow-up is the host's next request at the SAME
+            # virtual time (or nothing, if the run is done)
+            return (t, PRIO_REQUEST, h)
+        # a request's follow-up: completion at t + dt (dt ≥ 0.8·base/speed
+        # — the latency-noise floor), vanish-retry at t + 4·dt, or no-work
+        # retry at t + retry_after (≥ idle_retry); prio 0 / host -1 keep
+        # the bound below any real event at that time
+        dt_min = 0.8 * self.cfg.base_eval_time / self.speeds[h]
+        return (t + min(dt_min, self.cfg.idle_retry), PRIO_COMPLETE, -1)
+
+    def _stamped(self, msg: dict) -> dict:
+        if self.max_messages is not None and \
+                self.stats.messages >= self.max_messages:
+            raise SimulatedCrash(
+                f"simulated crash after {self.stats.messages} messages")
+        self.stats.messages += 1
+        msg["intake_seq"] = self.next_stamp
+        self.next_stamp += 1
+        return msg
+
+    def _release(self, ev, jobs, pending) -> None:
+        """Build the event's message(s), stamp them in canonical order,
+        and enqueue for the host's worker.  Raises SimulatedCrash at the
+        configured release count — exactly like the serial pool, AFTER
+        any earlier message of the same event went out (a crash can split
+        a register+request pair, and recovery must cope)."""
+        t, prio, h = ev
+        self.stats.sim_time = max(self.stats.sim_time, t)
+        msgs, crash = [], None
+        try:
+            if prio == PRIO_REQUEST:
+                if h not in self._registered:
+                    msgs.append(self._stamped(
+                        protocol.register(h, t, cs=self._next_cs(h))))
+                    self._registered.add(h)
+                msgs.append(self._stamped(
+                    protocol.request_work(h, t, cs=self._next_cs(h))))
+            else:
+                inf = self._inflight[h]
+                y = self._value(inf.search, inf.wu)
+                del self._inflight[h]
+                msgs.append(self._stamped(protocol.report_result(
+                    h, inf.search, inf.wu, y, t, cs=self._next_cs(h))))
+        except SimulatedCrash as e:
+            crash = e
+        if msgs:
+            # partial=True: the reply is drained but not absorbed — the
+            # run is crashing and recovery rebuilds the world from the
+            # server, exactly as for a mid-pair SIGKILL
+            pending[h] = self._follow_lb(t, prio, h)
+            jobs[h % self.n_workers].put((ev, msgs, crash is not None))
+        if crash is not None:
+            raise crash
+
+    def _absorb(self, result, pending) -> None:
+        ev, rep, err, partial = result
+        t, prio, h = ev
+        pending.pop(h, None)
+        if err is not None:
+            if self._crash is None:
+                self._crash = err
+            self._done = True
+            return
+        if partial:
+            return
+        if prio == PRIO_REQUEST:
+            if rep["kind"] == "work":
+                self.stats.work_received += 1
+                wu = int(rep["wu"])
+                noise, loss, _ = _wu_draws(self.cfg.seed, h, wu)
+                dt = self.cfg.base_eval_time / self.speeds[h] * noise
+                if loss < self.cfg.failure_prob:
+                    self.stats.failed += 1
+                    heapq.heappush(self._events,
+                                   (t + 4 * dt, PRIO_REQUEST, h))
+                else:
+                    self._inflight[h] = _InFlight(
+                        int(rep["search"]), wu,
+                        np.asarray(rep["point"], np.float64), t)
+                    heapq.heappush(self._events, (t + dt, PRIO_COMPLETE, h))
+            else:
+                self.stats.no_work += 1
+                if rep.get("done"):
+                    self._stopped.add(h)
+                else:
+                    heapq.heappush(
+                        self._events,
+                        (t + float(rep["retry_after"]), PRIO_REQUEST, h))
+        else:
+            self.stats.results_reported += 1
+            if rep.get("done"):
+                self._done = True
+            else:
+                heapq.heappush(self._events, (t, PRIO_REQUEST, h))
+
+    # -- the concurrent loop -------------------------------------------------
+
+    def run(self, transport) -> PoolStats:   # noqa: D102 — see class doc
+        cfg = self.cfg
+        if not self._seeded:
+            for h in range(cfg.n_hosts):
+                heapq.heappush(self._events,
+                               (float(self.online[h]), PRIO_REQUEST, h))
+        jobs = [queue.Queue() for _ in range(self.n_workers)]
+        results: "queue.Queue" = queue.Queue()
+
+        def worker(wid: int) -> None:
+            conn = transport.connect()
+            try:
+                while True:
+                    job = jobs[wid].get()
+                    if job is None:
+                        return
+                    ev, msgs, partial = job
+                    try:
+                        rep = None
+                        for m in msgs:
+                            t0 = time.perf_counter()
+                            rep = conn.call(m)
+                            if m.get("kind") == "request_work":
+                                self.request_wall.append(
+                                    time.perf_counter() - t0)
+                        results.put((ev, rep, None, partial))
+                    except BaseException as e:  # noqa: BLE001 — surfaced
+                        results.put((ev, None, e, partial))
+            finally:
+                conn.close()
+
+        threads = [threading.Thread(target=worker, args=(i,), daemon=True,
+                                    name=f"sim-client-{i}")
+                   for i in range(self.n_workers)]
+        for th in threads:
+            th.start()
+        pending: Dict[int, tuple] = {}
+        try:
+            while True:
+                # absorb whatever replies already landed (order-free)
+                while True:
+                    try:
+                        self._absorb(results.get_nowait(), pending)
+                    except queue.Empty:
+                        break
+                if self._done:
+                    if not pending:
+                        break
+                    self._absorb(results.get(timeout=self.REPLY_TIMEOUT),
+                                 pending)
+                    continue
+                ev = self._events[0] if self._events else None
+                while ev is not None and ev[2] in self._stopped:
+                    heapq.heappop(self._events)
+                    ev = self._events[0] if self._events else None
+                releasable = ev is not None and all(
+                    ev < lb for lb in pending.values())
+                if releasable:
+                    self._release(heapq.heappop(self._events), jobs,
+                                  pending)
+                elif pending:
+                    self._absorb(results.get(timeout=self.REPLY_TIMEOUT),
+                                 pending)
+                elif ev is None:
+                    break
+                else:        # unreachable: nothing pending blocks release
+                    raise RuntimeError("release stalled with empty pending")
+        except queue.Empty:
+            raise RuntimeError(
+                f"no reply within {self.REPLY_TIMEOUT:.0f}s with "
+                f"{len(pending)} deliveries in flight — lost message?")
+        finally:
+            for q in jobs:
+                q.put(None)
+            for th in threads:
+                th.join(timeout=10.0)
+        if self._crash is not None:
+            raise self._crash
         return self.stats
 
 
@@ -259,6 +528,9 @@ class ServerRunResult:
     replayed: int = 0                 # log records re-handled at recovery
     recovered_done: bool = False      # nothing left to do after restore
     cache: Optional[dict] = None      # eval-cache counters, when enabled
+    chaos: Optional[dict] = None      # injected-fault counters + plan doc
+    intake: Optional[dict] = None     # sequenced-intake counters
+    request_p99_ms: Optional[float] = None  # p99 request_work round-trip
 
     @property
     def engines(self):
@@ -280,7 +552,9 @@ class ServerSubstrate:
                  lease_timeout: Optional[float] = None,
                  max_messages: Optional[int] = None,
                  throttle_s: float = 0.0, warm: bool = True,
-                 cache: Optional[EvalCache] = None):
+                 cache: Optional[EvalCache] = None,
+                 concurrent: int = 0, chaos=None,
+                 chaos_seed: Optional[int] = None):
         self.specs = [specs] if isinstance(specs, SearchSpec) else list(specs)
         self.fleet = fleet
         self.backend = backend
@@ -301,6 +575,24 @@ class ServerSubstrate:
                               if lease_timeout is None else lease_timeout)
         self.max_messages = max_messages
         self.throttle_s = throttle_s
+        # concurrency + chaos (DESIGN.md §12): ``concurrent`` > 0 runs the
+        # fleet as that many racing client threads behind a sequenced
+        # intake; ``chaos`` (preset name | FaultPlan doc | FaultPlan)
+        # wraps the transport in the fault injector, ``chaos_seed``
+        # re-seeds a named plan without redefining it
+        self.concurrent = int(concurrent)
+        if chaos is None or isinstance(chaos, FaultPlan):
+            plan = chaos
+        elif isinstance(chaos, str):
+            plan = PRESETS[chaos]
+        elif isinstance(chaos, dict):
+            plan = FaultPlan.from_doc(chaos)
+        else:
+            raise TypeError(f"chaos must be None|str|dict|FaultPlan, "
+                            f"got {type(chaos).__name__}")
+        if plan is not None and chaos_seed is not None:
+            plan = dataclasses.replace(plan, seed=int(chaos_seed))
+        self.chaos_plan: Optional[FaultPlan] = plan
         if warm:
             # in-flight unknowns are bounded by the fleet (≤ 1 lease per
             # host), so warming the ladder to n_hosts guarantees zero
@@ -343,27 +635,65 @@ class ServerSubstrate:
                 if self.throttle_s:
                     time.sleep(self.throttle_s)
                 return rep
-        transport = make_transport(self.transport_name)
+        intake = None
+        if self.concurrent:
+            # the sequenced intake is what turns N racing connections into
+            # the canonical applied order; a TCP handler that PARKS must
+            # run off the loop thread (blocking_handler)
+            intake = SequencedIntake(handler)
+            handler = intake.submit
+        tkwargs = {}
+        if self.transport_name == "tcp" and self.concurrent:
+            tkwargs["blocking_handler"] = True
+        transport = make_transport(self.transport_name, **tkwargs)
+        if self.chaos_plan is not None:
+            transport = ChaosTransport(transport, self.chaos_plan)
         transport.start(handler)
-        pool = SimClientPool(self.fleet, self.eval_backend,
-                             max_messages=self.max_messages)
+        if self.concurrent:
+            pool = ConcurrentClientPool(self.fleet, self.eval_backend,
+                                        max_messages=self.max_messages,
+                                        n_workers=self.concurrent)
+        else:
+            pool = SimClientPool(self.fleet, self.eval_backend,
+                                 max_messages=self.max_messages)
         if resume:
             pool.resume_from(server.world_view())
-        conn = transport.connect()
+        conn = None
+        cache_status = None
         try:
-            pool.run(conn)
+            if self.concurrent:
+                pool.run(transport)       # workers open their own conns
+            else:
+                conn = transport.connect()
+                pool.run(conn)
+            # read the counters BEFORE the finally closes the store — a
+            # sqlite-backed cache cannot answer len() once closed
+            if self.cache is not None:
+                cache_status = self.cache.status()
         finally:
-            conn.close()
+            if conn is not None:
+                conn.close()
             transport.stop()
             if mgr is not None:
                 mgr.close()               # closes attached cache stores too
             elif self.cache is not None:
                 self.cache.store.flush()
+        p99 = None
+        if pool.request_wall:
+            p99 = float(np.percentile(np.asarray(pool.request_wall),
+                                      99.0) * 1000.0)
         return ServerRunResult(server=server, pool=pool.stats,
                                resumed=resume, replayed=replayed,
                                recovered_done=recovered_done,
-                               cache=None if self.cache is None
-                               else self.cache.status())
+                               cache=cache_status,
+                               chaos=None if self.chaos_plan is None else {
+                                   "plan": self.chaos_plan.to_doc(),
+                                   **dataclasses.asdict(transport.stats)},
+                               intake=None if intake is None else {
+                                   "next_seq": intake.next_seq,
+                                   "parked": intake.parked,
+                                   "out_of_band": intake.out_of_band},
+                               request_p99_ms=p99)
 
 
 # -- the seeded smoke problem + CLI (dryrun's kill/restore subprocess) --------
@@ -443,6 +773,9 @@ def result_doc(res: ServerRunResult) -> dict:
         "registry": res.server.registry.summary(),
         "pool": dataclasses.asdict(res.pool),
         "cache": res.cache,
+        "chaos": res.chaos,
+        "intake": res.intake,
+        "request_p99_ms": res.request_p99_ms,
     }
 
 
@@ -485,6 +818,14 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     help="wall-clock sleep per handled message (widens the "
                          "SIGKILL window; virtual time is unaffected, so "
                          "the trajectory is identical)")
+    ap.add_argument("--concurrent", type=int, default=0,
+                    help="run the fleet as N racing client threads behind "
+                         "the sequenced intake (0: serial single-conn)")
+    ap.add_argument("--chaos", default=None,
+                    choices=sorted(PRESETS),
+                    help="inject faults per this preset FaultPlan")
+    ap.add_argument("--chaos-seed", type=int, default=None,
+                    help="re-seed the chosen --chaos plan")
     args = ap.parse_args(argv)
 
     if args.problem == "lm":
@@ -531,12 +872,15 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     sub = ServerSubstrate(spec, fleet, backend, transport=args.transport,
                           ckpt_dir=args.ckpt_dir,
                           snapshot_every=args.snapshot_every,
-                          throttle_s=args.throttle_s, cache=cache)
+                          throttle_s=args.throttle_s, cache=cache,
+                          concurrent=args.concurrent, chaos=args.chaos,
+                          chaos_seed=args.chaos_seed)
     res = sub.run(resume=args.resume)
     doc = result_doc(res)
     doc["transport"] = args.transport
     doc["backend"] = args.backend
     doc["problem"] = args.problem
+    doc["concurrent"] = args.concurrent
     if args.problem == "lm":
         doc["arch"] = args.arch
     if args.out:
@@ -548,6 +892,11 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     if res.cache is not None:
         cache_note = (f" cache_hits={res.cache['hits']}"
                       f" cache_store={res.cache['store_size']}")
+    if res.chaos is not None:
+        cache_note += (f" chaos={res.chaos['plan']['name']}"
+                       f" retries={res.chaos['retries']}")
+    if args.concurrent:
+        cache_note += f" workers={args.concurrent}"
     print(f"[server.sim] transport={args.transport} backend={args.backend} "
           f"resumed={res.resumed} replayed={res.replayed} "
           f"iters={doc['iteration']} best={doc['best_fitness']:.6f} "

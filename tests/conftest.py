@@ -24,3 +24,8 @@ def pytest_configure(config):
         "markers", "cache: tier-1 eval-cache tests (bit-exact memo layer, "
                    "key canonicalization, persistence + warm restore; "
                    "select with -m cache)")
+    config.addinivalue_line(
+        "markers", "chaos: tier-1 fault-injection tests (sequenced intake, "
+                   "idempotent retry, concurrent-TCP chaos parity, "
+                   "malformed-frame fuzz; CI's chaos-smoke job selects "
+                   "them with -m chaos)")
