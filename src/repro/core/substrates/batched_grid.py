@@ -163,6 +163,16 @@ class BatchedVolunteerGrid:
         self.stats = BatchedGridStats()
         self._rs: Optional[_RunState] = None
 
+    @property
+    def in_flight(self) -> int:
+        """Device buckets currently riding the pipeline (handle-less
+        stale-only ticks excluded) — a live gauge for the metrics hub;
+        reading it never touches the run state."""
+        rs = self._rs
+        if rs is None:
+            return 0
+        return sum(1 for t in rs.pending if t.handle is not None)
+
     @staticmethod
     def warm_max_bucket(m: int, overcommit: float = 2.0) -> int:
         """Largest live block a run at phase size ``m`` can deliver in one

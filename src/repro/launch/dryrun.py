@@ -1068,6 +1068,226 @@ def run_chaos_server_smoke(out_dir: str, n_hosts: int = 48, m: int = 12,
     return ok
 
 
+def run_obs_server_smoke(out_dir: str, n_hosts: int = 48, m: int = 12,
+                         iterations: int = 3, n_stars: int = 200,
+                         n_clients: int = 8) -> bool:
+    """Observability-plane smoke (``--substrate obs_server``, DESIGN.md
+    §13).
+
+    Every leg shares one injected fleet failure — a quarter of the host
+    ids go silent at virtual time 150 — so the anomaly machinery always
+    has churn to see, and every parity pair lives in the same world:
+
+      1. the UNOBSERVED serial loopback baseline;
+      2. observed live: metrics hub + ``n_clients`` truly concurrent TCP
+         clients + a real background ``subscribe_stats`` subscriber
+         polling over its own socket during the run → bit-identical to 1,
+         and the subscriber must have received ≥ 2 stamped snapshots with
+         strictly increasing seqs;
+      3. observed under chaos (``drop_dup`` fault plan, concurrent TCP) →
+         bit-identical to 1 with faults provably injected (monitoring
+         traffic bypasses the injector, so the fault schedule — keyed on
+         stamped client messages — is unchanged);
+      4. observed + subscribed, SIGKILLed mid-stream on loopback,
+         restored from snapshot + replay log with obs re-attached →
+         bit-identical to 1 (the hub owns no replayable state);
+      5. anomaly defense live: detectors quarantine the silenced cohort
+         out of the registry's reliable set (measurably smaller than the
+         undefended baseline's), recording the verdict schedule — then a
+         REPLAY run applies the recorded schedule with detectors off and
+         must reproduce the defended trajectory bit-for-bit.
+
+    Writes artifacts/dryrun/substrate_obs_server.json; returns pass/fail.
+    """
+    import shutil
+    import signal
+    import subprocess
+    import sys
+    import tempfile
+
+    child_env = {k: v for k, v in os.environ.items() if k != "XLA_FLAGS"}
+    child_env["JAX_PLATFORMS"] = "cpu"
+    src_dir = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                           ".."))
+    child_env["PYTHONPATH"] = src_dir + (
+        ":" + child_env["PYTHONPATH"] if child_env.get("PYTHONPATH") else "")
+    spec_args = ["--n-hosts", str(n_hosts), "--m", str(m),
+                 "--iterations", str(iterations), "--n-stars", str(n_stars),
+                 "--silence-at", "150", "--silence-frac", "0.25"]
+    obs_args = ["--obs", "--stats-interval", "10"]
+    conc_args = ["--transport", "tcp", "--concurrent", str(n_clients)]
+
+    def child(extra, timeout=600):
+        cmd = [sys.executable, "-m", "repro.server.sim"] + spec_args + extra
+        return subprocess.run(cmd, env=child_env, timeout=timeout,
+                              capture_output=True, text=True)
+
+    def load(path):
+        with open(path) as f:
+            return json.load(f)
+
+    def trajectories_equal(a, b):
+        return (a["history"] == b["history"]
+                and a["iteration"] == b["iteration"]
+                and a["best_fitness"] == b["best_fitness"]
+                and a["engine_stats"] == b["engine_stats"])
+
+    tmp = tempfile.mkdtemp(prefix="obs_smoke_")
+    report = {"n_hosts": n_hosts, "m": m, "iterations": iterations,
+              "n_clients": n_clients, "silence_at": 150.0,
+              "silence_frac": 0.25}
+    ok = True
+    try:
+        # 1: the unobserved baseline (same silenced world as every leg)
+        base_path = os.path.join(tmp, "base.json")
+        r = child(["--out", base_path])
+        if r.returncode != 0:
+            print(r.stdout + r.stderr)
+            raise RuntimeError("unobserved baseline child failed")
+        base = load(base_path)
+
+        # 2: observed + live TCP subscriber + concurrent clients
+        live_path = os.path.join(tmp, "observed.json")
+        r = child([*conc_args, *obs_args, "--subscribe", "--out",
+                   live_path])
+        if r.returncode != 0:
+            print(r.stdout + r.stderr)
+            raise RuntimeError("observed child failed")
+        live = load(live_path)
+        sub = live["subscriber"]
+        live_ok = (trajectories_equal(base, live)
+                   and live["obs"]["snapshots"] >= 2
+                   and sub["snapshots"] >= 2 and sub["stamped_ok"]
+                   and not sub["errors"])
+        report["observed_live"] = {
+            "trajectory_equal": trajectories_equal(base, live),
+            "hub_snapshots": live["obs"]["snapshots"],
+            "subscriber": sub, "ok": live_ok}
+        ok = ok and live_ok
+
+        # 3: observed under an injected fault schedule
+        chaos_path = os.path.join(tmp, "observed_chaos.json")
+        r = child([*conc_args, *obs_args, "--chaos", "drop_dup", "--out",
+                   chaos_path])
+        if r.returncode != 0:
+            print(r.stdout + r.stderr)
+            raise RuntimeError("observed chaos child failed")
+        cdoc = load(chaos_path)
+        ch = cdoc["chaos"]
+        injected = (ch["drops_request"] + ch["drops_reply"]
+                    + ch["duplicates"] + ch["delays"] + ch["resets"]
+                    + ch["torn_writes"])
+        chaos_ok = trajectories_equal(base, cdoc) and injected > 0
+        report["observed_chaos"] = {
+            "trajectory_equal": trajectories_equal(base, cdoc),
+            "faults_injected": injected, "ok": chaos_ok}
+        ok = ok and chaos_ok
+
+        # 4: SIGKILL mid-stream, restore with obs re-attached
+        ckpt = os.path.join(tmp, "ckpt_obs")
+        kill_args = [*obs_args, "--subscribe", "--ckpt-dir", ckpt,
+                     "--snapshot-every", "150", "--throttle-s", "0.002"]
+        proc = subprocess.Popen(
+            [sys.executable, "-m", "repro.server.sim", *spec_args,
+             *kill_args],
+            env=child_env, stdout=subprocess.PIPE, stderr=subprocess.PIPE)
+        log_path = os.path.join(ckpt, "replay.jsonl")
+        deadline = time.time() + 300
+        killed_mid_run = False
+        kill_after = max(150, int(0.4 * base["pool"]["messages"]))
+        while time.time() < deadline:
+            if proc.poll() is not None:
+                break
+            has_snap = os.path.isdir(ckpt) and any(
+                f.startswith("snapshot_") for f in os.listdir(ckpt))
+            log_lines = 0
+            if os.path.exists(log_path):
+                with open(log_path, "rb") as f:
+                    log_lines = f.read().count(b"\n")
+            if has_snap and log_lines >= kill_after:
+                proc.send_signal(signal.SIGKILL)
+                proc.wait(timeout=30)
+                killed_mid_run = True
+                break
+            time.sleep(0.02)
+        if not killed_mid_run:
+            proc.kill()
+            report["kill_restore"] = {"killed_mid_run": False, "ok": False}
+            ok = False
+        else:
+            out_path = os.path.join(tmp, "resume_obs.json")
+            r = child([*kill_args, "--resume", "--out", out_path])
+            if r.returncode != 0:
+                print(r.stdout + r.stderr)
+                report["kill_restore"] = {"killed_mid_run": True,
+                                          "ok": False,
+                                          "error": "resume child failed"}
+                ok = False
+            else:
+                res = load(out_path)
+                k_ok = (trajectories_equal(base, res)
+                        and not res["recovered_done"])
+                report["kill_restore"] = {
+                    "killed_mid_run": True,
+                    "recovered_done": res["recovered_done"],
+                    "replayed": res["replayed"],
+                    "hub_snapshots": res["obs"]["snapshots"],
+                    "trajectory_equal": trajectories_equal(base, res),
+                    "ok": k_ok}
+                ok = ok and k_ok
+
+        # 5: live defense records its schedule; a replay reproduces it
+        sched_path = os.path.join(tmp, "schedule.json")
+        def_path = os.path.join(tmp, "defended.json")
+        r = child([*obs_args, "--defense", "--defense-out", sched_path,
+                   "--out", def_path])
+        if r.returncode != 0:
+            print(r.stdout + r.stderr)
+            raise RuntimeError("defense child failed")
+        defended = load(def_path)
+        d = defended["defense"]
+        shrunk = (defended["registry"]["reliable_set"]
+                  < base["registry"]["reliable_set"])
+        rep_path = os.path.join(tmp, "replayed.json")
+        r = child([*obs_args, "--defense-replay", sched_path, "--out",
+                   rep_path])
+        if r.returncode != 0:
+            print(r.stdout + r.stderr)
+            raise RuntimeError("defense replay child failed")
+        replayed = load(rep_path)
+        defense_ok = (d["quarantined_now"] > 0 and shrunk
+                      and trajectories_equal(defended, replayed)
+                      and replayed["defense"]["mode"] == "replay"
+                      and replayed["defense"]["quarantined_now"]
+                      == d["quarantined_now"])
+        report["defense"] = {
+            "events": d["events"], "by_action": d["by_action"],
+            "quarantined_now": d["quarantined_now"],
+            "reliable_set_defended": defended["registry"]["reliable_set"],
+            "reliable_set_undefended": base["registry"]["reliable_set"],
+            "reliable_set_shrunk": shrunk,
+            "replay_trajectory_equal": trajectories_equal(defended,
+                                                          replayed),
+            "ok": defense_ok}
+        ok = ok and defense_ok
+    except Exception as e:  # noqa: BLE001 — smoke must report, not die
+        report["error"] = str(e)
+        ok = False
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+    report["parity_ok"] = ok
+    path = os.path.join(out_dir, "substrate_obs_server.json")
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"[{'ok' if ok else 'FAIL'}] substrate obs_server: "
+          f"live={report.get('observed_live', {}).get('ok')} "
+          f"chaos={report.get('observed_chaos', {}).get('ok')} "
+          f"kill={report.get('kill_restore', {}).get('ok')} "
+          f"defense={report.get('defense', {}).get('ok')} "
+          f"-> {path}")
+    return ok
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)

@@ -68,6 +68,14 @@ SUBSTRATES: Dict[str, SubstrateSmoke] = {
         "and the production-mesh backend; every run bit-identical to the "
         "fault-free serial baseline",
         "repro.launch.dryrun:run_chaos_server_smoke"),
+    "obs_server": SubstrateSmoke(
+        "obs_server",
+        "live observability plane: metrics hub + subscribe_stats stream "
+        "over concurrent TCP (live subscriber), under chaos, and through "
+        "a SIGKILL restore — all bit-identical to the unobserved "
+        "baseline; injected fleet silence paged out by the anomaly "
+        "defense, replayed bit-identically from its recorded schedule",
+        "repro.launch.dryrun:run_obs_server_smoke"),
 }
 
 

@@ -1,0 +1,16 @@
+"""Live observability plane (DESIGN.md §13): MetricsHub counters/probes,
+the ``subscribe_stats`` stream, and anomaly-driven fleet defense."""
+from repro.obs.anomaly import (PAGE, QUARANTINE, RELEASE, SCHEDULE_VERSION,
+                               AnomalyEvent, FleetDefense)
+from repro.obs.metrics import (STREAM_VERSION, MetricsHub, attach_cache,
+                               attach_coalescer, attach_engine, attach_grid,
+                               attach_intake)
+from repro.obs.stream import BackgroundSubscriber, StatsSubscriber
+
+__all__ = [
+    "MetricsHub", "STREAM_VERSION", "attach_engine", "attach_grid",
+    "attach_coalescer", "attach_cache", "attach_intake",
+    "AnomalyEvent", "FleetDefense", "SCHEDULE_VERSION",
+    "QUARANTINE", "RELEASE", "PAGE",
+    "StatsSubscriber", "BackgroundSubscriber",
+]

@@ -201,7 +201,7 @@ class CheckpointManager:
     replaying them would be harmless but pointlessly bloats the log.
     """
 
-    READ_ONLY = frozenset({"status"})
+    READ_ONLY = frozenset({"status", "subscribe_stats"})
 
     def __init__(self, ckpt_dir: str, snapshot_every: int = 1000,
                  keep: int = 2):

@@ -14,12 +14,16 @@ and points cross the wire and must come back the same bits).
 
 Message kinds (client → server)::
 
-    register       {host_id, now}
-    request_work   {host_id, now}
-    report_result  {host_id, search, wu, y, now}
-    heartbeat      {host_id, now}
-    shutdown       {now}
-    status         {}                      # read-only, never mutates
+    register        {host_id, now}
+    request_work    {host_id, now}
+    report_result   {host_id, search, wu, y, now}
+    heartbeat       {host_id, now}
+    shutdown        {now}
+    status          {}                     # read-only, never mutates
+    subscribe_stats {since}                # read-only cursor long-poll on
+                                           # the metrics ring (§13); like
+                                           # status: unstamped, uncounted,
+                                           # never logged
 
 and replies (server → client)::
 
@@ -30,7 +34,12 @@ and replies (server → client)::
     status         {…summary…}             # incl. ``cache`` counters (hits,
                                            # misses, lanes_saved, store_size)
                                            # when an eval cache is attached,
-                                           # else ``cache: null`` (§10)
+                                           # else ``cache: null`` (§10);
+                                           # service pressure (lease depth,
+                                           # intake queue) rides here too
+    stats          {snapshots, cursor, interval, stream_v}
+                                           # every hub snapshot with
+                                           # seq > since, oldest first (§13)
     error          {error}
 
 ``wu`` ids are the engine's tickets (unique per search); ``validates``
@@ -192,6 +201,15 @@ def status() -> dict:
     return {"kind": "status"}
 
 
+def subscribe_stats(since: int = -1) -> dict:
+    """Long-poll the server's metrics ring for snapshots with
+    ``seq > since``.  Deliberately stamp-free, like ``status``: a
+    monitoring poll must never consume an intake stamp or a (host, cs)
+    slot, so it can interleave with the applied stream at any rate
+    without perturbing it."""
+    return {"kind": "subscribe_stats", "since": int(since)}
+
+
 # -- reply builders (server) --------------------------------------------------
 
 def work_reply(search: int, wu: int, phase: int, point, alpha: float,
@@ -211,6 +229,13 @@ def no_work_reply(retry_after: float, done: bool) -> dict:
 def ack_reply(done: bool, iteration: int, best: float) -> dict:
     return {"kind": "ack", "done": bool(done), "iteration": int(iteration),
             "best": float(best)}
+
+
+def stats_reply(snapshots, cursor: int, interval: float,
+                stream_v: int) -> dict:
+    return {"kind": "stats", "snapshots": list(snapshots),
+            "cursor": int(cursor), "interval": float(interval),
+            "stream_v": int(stream_v)}
 
 
 def error_reply(msg: str) -> dict:

@@ -36,12 +36,24 @@ Reliability gates (semantics carried over from the pre-registry
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 from typing import Dict, Optional
 
-import numpy as np
-
 ALIVE, SUSPECT, DEAD = "alive", "suspect", "dead"
+
+
+def _median(vals) -> Optional[float]:
+    """Median of a list of floats, bit-identical to ``np.median`` (odd n
+    picks the middle element; even n averages the two middles, and /2 is
+    an exact float op) without the array-conversion overhead — the
+    metrics-hub probe recomputes this every sample, and at fleet sizes
+    the numpy round-trip dominated the whole observability budget."""
+    if not vals:
+        return None
+    s = sorted(vals)
+    mid = len(s) // 2
+    return float(s[mid]) if len(s) % 2 else (s[mid - 1] + s[mid]) / 2.0
 
 
 @dataclasses.dataclass
@@ -57,6 +69,11 @@ class HostRecord:
     ewma_latency: Optional[float] = None
     state: str = ALIVE
     nowork_streak: int = 0            # consecutive empty-handed requests
+    # paged out by the fleet-defense layer (repro.obs.anomaly): a
+    # quarantined host fails ``reliable()`` until released.  Defaulted so
+    # pre-obs snapshots load unchanged; serialized with the record so a
+    # crash-restored registry keeps its quarantine.
+    quarantined: bool = False
     # when this host will next contact us (set on every reply; None while
     # it holds a lease — its next contact derives from the lease).  The
     # crash-restored client world is rebuilt from exactly this field.
@@ -82,6 +99,28 @@ class HostRegistry:
         self.suspect_after = suspect_after
         self.dead_after = dead_after
         self.hosts: Dict[int, HostRecord] = {}
+        # monotonic churn-transition counters (observability, surfaced as
+        # MetricsHub gauges): alive→suspect and →dead decays counted in
+        # sweep(), any-contact revivals counted in touch().  Cheap ints on
+        # paths that already walk/touch the record — no new branching cost
+        self.churn_to_suspect = 0
+        self.churn_to_dead = 0
+        self.churn_revived = 0
+        # incremental fleet aggregates (DESIGN.md §13): the metrics hub
+        # probes ``summary()`` every sample, so the totals are maintained
+        # on the paths that already touch a record (a few int ops per
+        # message, paid identically with or without a hub) instead of
+        # re-scanned per sample — only the latency median / reliable-set
+        # pass stays O(n) at sample time
+        self._issued_total = 0
+        self._returned_total = 0
+        self._stale_total = 0
+        self._warming = 0             # hosts with no ewma sample yet
+        self._quarantined = 0
+        self._excluded = 0            # hosts failing the return-rate gate
+        self._states = {ALIVE: 0, SUSPECT: 0, DEAD: 0}
+        self._suspect_ids: set = set()
+        self._dead_ids: set = set()
 
     # -- bookkeeping ---------------------------------------------------------
 
@@ -89,7 +128,29 @@ class HostRegistry:
         rec = self.hosts.get(host_id)
         if rec is None:
             rec = self.hosts[host_id] = HostRecord(host_id)
+            self._states[ALIVE] += 1
+            self._warming += 1
         return rec
+
+    def _set_state(self, rec: HostRecord, new_state: str) -> None:
+        old = rec.state
+        if old == new_state:
+            return
+        self._states[old] -= 1
+        self._states[new_state] += 1
+        if old == SUSPECT:
+            self._suspect_ids.discard(rec.host_id)
+        elif old == DEAD:
+            self._dead_ids.discard(rec.host_id)
+        if new_state == SUSPECT:
+            self._suspect_ids.add(rec.host_id)
+        elif new_state == DEAD:
+            self._dead_ids.add(rec.host_id)
+        rec.state = new_state
+
+    def _rate_excluded(self, rec: HostRecord) -> bool:
+        return (rec.issued >= self.min_issued_for_rate and
+                rec.returned < self.min_return_rate * rec.issued)
 
     def register(self, host_id: int, now: float) -> HostRecord:
         """Idempotent: re-registering (a client reconnecting after a server
@@ -103,25 +164,39 @@ class HostRegistry:
         """Any contact proves liveness and revives a suspect/dead host."""
         rec = self.record(host_id)
         rec.last_seen = max(rec.last_seen, now)
-        rec.state = ALIVE
+        if rec.state != ALIVE:
+            self.churn_revived += 1
+            self._set_state(rec, ALIVE)
         return rec
 
     def on_issue(self, host_id: int, now: float) -> None:
         rec = self.touch(host_id, now)
+        ex0 = self._rate_excluded(rec)
         rec.issued += 1
+        self._issued_total += 1
+        if self._rate_excluded(rec) != ex0:
+            self._excluded += -1 if ex0 else 1
         rec.nowork_streak = 0
         rec.next_contact_at = None    # next contact derives from the lease
 
     def on_result(self, host_id: int, now: float, turnaround: float,
                   stale: bool = False) -> None:
         rec = self.touch(host_id, now)
+        ex0 = self._rate_excluded(rec)
         rec.returned += 1
+        self._returned_total += 1
         if stale:
             rec.stale += 1
+            self._stale_total += 1
         ta = max(turnaround, 1e-9)
         a = self.latency_alpha
-        rec.ewma_latency = ta if rec.ewma_latency is None \
-            else (1 - a) * rec.ewma_latency + a * ta
+        if rec.ewma_latency is None:
+            rec.ewma_latency = ta
+            self._warming -= 1
+        else:
+            rec.ewma_latency = (1 - a) * rec.ewma_latency + a * ta
+        if self._rate_excluded(rec) != ex0:
+            self._excluded += -1 if ex0 else 1
         rec.nowork_streak = 0
         rec.next_contact_at = now     # a client re-requests immediately
 
@@ -136,9 +211,13 @@ class HostRegistry:
         for rec in self.hosts.values():
             silent = now - rec.last_seen
             if silent > self.dead_after:
-                rec.state = DEAD
+                if rec.state != DEAD:
+                    self.churn_to_dead += 1
+                    self._set_state(rec, DEAD)
             elif silent > self.suspect_after:
-                rec.state = SUSPECT
+                if rec.state == ALIVE:
+                    self.churn_to_suspect += 1
+                self._set_state(rec, SUSPECT)
 
     # -- scheduling gates ----------------------------------------------------
 
@@ -153,37 +232,125 @@ class HostRegistry:
     def reliable(self, host_id: int) -> bool:
         """Latency-critical work gate: returns work AND below-median EWMA
         turnaround (unknown hosts get the benefit of the doubt while the
-        sample is small)."""
+        sample is small).  A quarantined host (paged out by the anomaly-
+        defense layer) fails unconditionally until released."""
+        rec = self.hosts.get(host_id)
+        if rec is not None and rec.quarantined:
+            return False
         if not self.returns_work(host_id):
             return False
-        rec = self.hosts.get(host_id)
         t = None if rec is None else rec.ewma_latency
         known = [r.ewma_latency for r in self.hosts.values()
                  if r.ewma_latency is not None]
         if t is None or len(known) < self.min_latency_samples:
             return True
-        return t <= float(np.median(known))
+        return t <= _median(known)
+
+    # -- fleet-defense paging (repro.obs.anomaly) ----------------------------
+
+    def quarantine(self, host_id: int) -> bool:
+        """Page a host out of the ``reliable()`` set.  Returns whether the
+        flag actually flipped (idempotent re-pages are no-ops)."""
+        rec = self.record(host_id)
+        flipped = not rec.quarantined
+        rec.quarantined = True
+        if flipped:
+            self._quarantined += 1
+        return flipped
+
+    def release(self, host_id: int) -> bool:
+        rec = self.hosts.get(host_id)
+        if rec is None or not rec.quarantined:
+            return False
+        rec.quarantined = False
+        self._quarantined -= 1
+        return True
 
     # -- observability -------------------------------------------------------
 
     def counts(self) -> Dict[str, int]:
-        out = {ALIVE: 0, SUSPECT: 0, DEAD: 0}
-        for rec in self.hosts.values():
-            out[rec.state] += 1
-        return out
+        return dict(self._states)
 
-    def summary(self) -> dict:
-        recs = self.hosts.values()
-        lat = [r.ewma_latency for r in recs if r.ewma_latency is not None]
-        return {
-            "hosts": len(self.hosts), "states": self.counts(),
-            "issued": sum(r.issued for r in recs),
-            "returned": sum(r.returned for r in recs),
-            "stale_returns": sum(r.stale for r in recs),
-            "median_latency": float(np.median(lat)) if lat else None,
-            "excluded_by_return_rate": sum(
-                0 if self.returns_work(r.host_id) else 1 for r in recs),
+    def ids(self, state: str):
+        """Sorted host ids currently in one churn state — the cohort lists
+        the anomaly detector pages on."""
+        if state == SUSPECT:
+            return sorted(self._suspect_ids)
+        if state == DEAD:
+            return sorted(self._dead_ids)
+        return sorted(h for h, r in self.hosts.items() if r.state == state)
+
+    def reliable_set(self):
+        """Sorted host ids currently passing ``reliable()`` — the gauge
+        the defense gate measurably shrinks.  Same semantics as calling
+        ``reliable()`` per host, but the latency median is computed once
+        (``summary()``/snapshot probes call this per sample, and the gate
+        must stay O(n)).  Hosts still warming up (``ewma_latency is
+        None``) are INCLUDED — they hold the benefit of the doubt, and
+        are reported separately as ``warming`` rather than silently
+        dropped from the gauge."""
+        known = [r.ewma_latency for r in self.hosts.values()
+                 if r.ewma_latency is not None]
+        med = _median(known)
+        doubt = len(known) < self.min_latency_samples
+        out = []
+        for h, r in self.hosts.items():
+            if r.quarantined or not self.returns_work(h):
+                continue
+            if r.ewma_latency is None or doubt or r.ewma_latency <= med:
+                out.append(h)
+        return sorted(out)
+
+    def summary(self, include_ids: bool = False) -> dict:
+        # the totals come from the incremental aggregates; the one pass
+        # that remains collects latencies for the median and the
+        # reliable-set count (both couple all hosts through the median,
+        # so they cannot be maintained incrementally).  The metrics hub
+        # calls this every sample — the former per-field scans priced
+        # observability at ~25% of a loopback run's wall, far above the
+        # §13 overhead ceiling — so the pass is one comprehension, and
+        # while nothing is quarantined or rate-excluded (known for free
+        # from the aggregates) the gate filter is skipped outright: every
+        # host is gated, so the gated latencies ARE ``lat`` and the gated
+        # warming count IS ``_warming``.  include_ids adds the
+        # suspect/dead cohort id lists the anomaly detector pages on
+        # (maintained sets).
+        lat = [t for r in self.hosts.values()
+               if (t := r.__dict__["ewma_latency"]) is not None]
+        med = _median(lat)
+        if self._quarantined or self._excluded:
+            min_iss, min_rate = self.min_issued_for_rate, self.min_return_rate
+            gd = [d for r in self.hosts.values()
+                  if not (d := r.__dict__)["quarantined"]
+                  and not ((iss := d["issued"]) >= min_iss
+                           and d["returned"] < min_rate * iss)]
+            gated = [t for d in gd if (t := d["ewma_latency"]) is not None]
+            gated_warming = len(gd) - len(gated)
+        else:
+            gated, gated_warming = lat, self._warming
+        if len(lat) < self.min_latency_samples:
+            reliable = gated_warming + len(gated)   # benefit of the doubt
+        else:
+            reliable = gated_warming + bisect.bisect_right(sorted(gated), med)
+        out = {
+            "hosts": len(self.hosts), "states": dict(self._states),
+            "issued": self._issued_total, "returned": self._returned_total,
+            "stale_returns": self._stale_total,
+            "median_latency": med,
+            "excluded_by_return_rate": self._excluded,
+            # §13 fleet-health gauges: cold-start hosts are "warming", not
+            # invisible; the reliable set is the defended surface
+            "warming": self._warming,
+            "reliable_set": reliable,
+            "quarantined": self._quarantined,
+            "churn": {"to_suspect": self.churn_to_suspect,
+                      "to_dead": self.churn_to_dead,
+                      "revived": self.churn_revived},
         }
+        if include_ids:
+            out["suspect_ids"] = sorted(self._suspect_ids)
+            out["dead_ids"] = sorted(self._dead_ids)
+        return out
 
     # -- serialization -------------------------------------------------------
 
@@ -191,7 +358,10 @@ class HostRegistry:
         # vars() copy, not dataclasses.asdict: the recursive walk is ~50x
         # slower and snapshots serialize thousands of host records
         return {"hosts": {str(h): dict(vars(rec))
-                          for h, rec in self.hosts.items()}}
+                          for h, rec in self.hosts.items()},
+                "churn": {"to_suspect": self.churn_to_suspect,
+                          "to_dead": self.churn_to_dead,
+                          "revived": self.churn_revived}}
 
     def load_state(self, d: dict) -> None:
         self.hosts = {}
@@ -199,3 +369,32 @@ class HostRegistry:
             rec = dict(rec)
             rec["host_id"] = int(rec["host_id"])
             self.hosts[int(h)] = HostRecord(**rec)
+        churn = d.get("churn", {})
+        self.churn_to_suspect = int(churn.get("to_suspect", 0))
+        self.churn_to_dead = int(churn.get("to_dead", 0))
+        self.churn_revived = int(churn.get("revived", 0))
+        self._rebuild_aggregates()
+
+    def _rebuild_aggregates(self) -> None:
+        """One recovery-time scan re-derives every incremental aggregate
+        from the loaded records — the aggregates are pure caches, never
+        serialized, so a snapshot from any prior version restores them."""
+        self._issued_total = self._returned_total = self._stale_total = 0
+        self._warming = self._quarantined = self._excluded = 0
+        self._states = {ALIVE: 0, SUSPECT: 0, DEAD: 0}
+        self._suspect_ids, self._dead_ids = set(), set()
+        for h, r in self.hosts.items():
+            self._states[r.state] += 1
+            if r.state == SUSPECT:
+                self._suspect_ids.add(h)
+            elif r.state == DEAD:
+                self._dead_ids.add(h)
+            self._issued_total += r.issued
+            self._returned_total += r.returned
+            self._stale_total += r.stale
+            if r.ewma_latency is None:
+                self._warming += 1
+            if r.quarantined:
+                self._quarantined += 1
+            if self._rate_excluded(r):
+                self._excluded += 1

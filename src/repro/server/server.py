@@ -192,6 +192,12 @@ class WorkServer:
         self._last_sweep = float("-inf")
         self.sweep_interval = 5.0     # virtual seconds between churn sweeps
         self._cache_status = None     # read-only eval-cache probe (attach)
+        # observability plane (DESIGN.md §13): both attach-only and both
+        # outside state_dict — a hub samples AT applied-message boundaries
+        # but never mutates server state, an intake probe only reads depth
+        # counters, so neither can perturb the replay contract
+        self._hub = None
+        self._intake_probe = None
         # idempotency layer (DESIGN.md §12): per-host last applied client
         # sequence number + the reply it produced.  Clients are serial per
         # host (one logical message in flight), so a window of 1 is exact:
@@ -216,6 +222,41 @@ class WorkServer:
         (checkpoint-dir composition), and status is never logged or
         replayed, so attaching a cache cannot perturb recovery."""
         self._cache_status = cache.status
+        if self._hub is not None:
+            self._hub.register_probe("cache", self._cache_status,
+                                     rates=("hits", "misses"))
+
+    def attach_intake(self, intake) -> None:
+        """Surface a ``SequencedIntake``'s pressure counters in ``status``
+        (and as a hub probe): next expected stamp, arrivals parked waiting
+        for their turn, out-of-band retry deliveries.  Observability only,
+        exactly like ``attach_cache``."""
+        def probe() -> dict:
+            return {"next_seq": intake.next_seq, "parked": intake.parked,
+                    "out_of_band": intake.out_of_band}
+        self._intake_probe = probe
+        if self._hub is not None:
+            self._hub.register_probe("intake", probe, plain=True)
+
+    def attach_hub(self, hub) -> None:
+        """Publish into a ``MetricsHub`` (DESIGN.md §13): the server
+        registers its own probes (service counters + lease depth, registry
+        health incl. churn cohort ids) and samples the hub at applied-
+        message boundaries in virtual time.  Sampling is read-only w.r.t.
+        server state and the hub is not in ``state_dict`` — observability
+        cannot enter the replay log or the recovery path."""
+        self._hub = hub
+        # plain=True: both probes emit freshly-built python scalars (the
+        # engine stores best_fitness as float, host ids are ints), so the
+        # hub's codec-sanitizing walk is skipped on the per-sample path
+        hub.register_probe("server", self._probe_server,
+                           rates=("messages", "leases_issued"), plain=True)
+        hub.register_probe("registry", self._probe_registry, plain=True)
+        if self._cache_status is not None:
+            hub.register_probe("cache", self._cache_status,
+                               rates=("hits", "misses"))
+        if self._intake_probe is not None:
+            hub.register_probe("intake", self._intake_probe, plain=True)
 
     # -- introspection -------------------------------------------------------
 
@@ -317,6 +358,11 @@ class WorkServer:
             # a monitoring poll must never perturb the replayable state
             self.last_applied = False
             return self._status()
+        if kind == "subscribe_stats":
+            # same contract as status (§13): unstamped, uncounted, never
+            # logged, never sampled — and serving the ring mutates nothing
+            self.last_applied = False
+            return self._subscribe_stats(msg)
         # idempotent delivery: before ANY state is touched (including the
         # message counter), a (host, cs) the server already applied short-
         # circuits to the cached reply — a retried report can't re-vote, a
@@ -346,6 +392,15 @@ class WorkServer:
         self.last_applied = True
         self.counters.messages += 1
         rep = self._dispatch(kind, msg)
+        hub = self._hub
+        if hub is not None and \
+                (hub.next_sample_at is None or self.now >= hub.next_sample_at):
+            # sample on the message-derived clock AFTER the mutation it
+            # carries: boundaries (and hence snapshot seqs and defense
+            # verdicts) are a pure function of the applied sequence.  The
+            # interval check is inlined so the per-message cost of an
+            # attached hub is one attribute compare, not a call
+            hub.maybe_sample(self.now)
         if keyed:
             # (host_id, cs) is the client's reply-matching key — cs alone
             # is ambiguous on a connection multiplexing several hosts
@@ -495,7 +550,43 @@ class WorkServer:
             "registry": self.registry.summary(),
             "cache": (None if self._cache_status is None
                       else self._cache_status()),
+            # service pressure (§13 satellite): lease depth is ``leases``
+            # above; intake queue depth rides here when one is attached
+            "intake": (None if self._intake_probe is None
+                       else self._intake_probe()),
         }
+
+    def _subscribe_stats(self, msg: dict) -> dict:
+        if self._hub is None:
+            return protocol.error_reply(
+                "no metrics hub attached (stats are opt-in server-side)")
+        from repro.obs.metrics import STREAM_VERSION
+        snaps, cursor = self._hub.since(int(msg.get("since", -1)))
+        return protocol.stats_reply(snaps, cursor, self._hub.interval,
+                                    STREAM_VERSION)
+
+    # -- hub probes (read-only views over existing state, §13) ---------------
+
+    def _probe_server(self) -> dict:
+        # vars() copy, not dataclasses.asdict: the counters dataclass is
+        # flat, and the recursive walk costs ~10x on the per-sample path
+        d = dict(vars(self.counters))
+        d["lease_depth"] = len(self.leases)
+        d["lapsed_depth"] = len(self.lapsed)
+        d["done"] = self.done
+        _, best_y = self.best()
+        d["best"] = best_y
+        d["searches"] = [{
+            "search_id": e.search_id, "status": e.status,
+            "phase": e.fgdo.phase, "iteration": e.fgdo.engine.iteration,
+            "best": e.fgdo.engine.best_fitness,
+        } for e in self.searches]
+        return d
+
+    def _probe_registry(self) -> dict:
+        # include_ids: the cohort ids the anomaly detector pages on ride
+        # the summary's single pass instead of two extra registry scans
+        return self.registry.summary(include_ids=True)
 
     def _apply_portfolio(self) -> None:
         _, best_y = self.best()

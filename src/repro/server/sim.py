@@ -119,10 +119,22 @@ class SimClientPool:
     """Deterministic virtual-time client fleet over one connection."""
 
     def __init__(self, cfg: GridConfig, backend: EvalBackend,
-                 max_messages: Optional[int] = None):
+                 max_messages: Optional[int] = None,
+                 silence_at: Optional[float] = None,
+                 silence_frac: float = 0.25):
         self.cfg = cfg
         self.backend = backend
         self.max_messages = max_messages
+        # injected fleet failure (the obs smoke's churn anomaly): from
+        # virtual time ``silence_at`` on, the deterministic cohort of the
+        # ``silence_frac``·n_hosts LOWEST host ids stops contacting the
+        # server — events are swallowed at pop time, so the server only
+        # ever sees silence: leases lapse, the registry sweep flips the
+        # cohort suspect, and the anomaly detector has something to page
+        self.silence_at = None if silence_at is None else float(silence_at)
+        n_sil = 0 if silence_at is None \
+            else int(round(float(silence_frac) * cfg.n_hosts))
+        self.silenced = frozenset(range(n_sil))
         self.speeds, self.malicious, _ = sample_hosts(cfg)
         online_rng = np.random.default_rng(
             np.random.SeedSequence((_ONLINE_SALT, cfg.seed)))
@@ -214,6 +226,13 @@ class SimClientPool:
 
     # -- the virtual-time loop ----------------------------------------------
 
+    def _gone_silent(self, t: float, h: int) -> bool:
+        """Whether this event belongs to the silenced cohort after the
+        silence time (deterministic in virtual time, so every run sharing
+        the silence parameters swallows exactly the same events)."""
+        return self.silence_at is not None and t >= self.silence_at \
+            and h in self.silenced
+
     def _next_cs(self, h: int) -> int:
         c = self._cs.get(h, 0)
         self._cs[h] = c + 1
@@ -240,7 +259,7 @@ class SimClientPool:
         done = False
         while self._events and not done:
             t, prio, h = heapq.heappop(self._events)
-            if h in self._stopped:
+            if h in self._stopped or self._gone_silent(t, h):
                 continue
             self.stats.sim_time = max(self.stats.sim_time, t)
             if prio == PRIO_REQUEST:
@@ -329,8 +348,11 @@ class ConcurrentClientPool(SimClientPool):
     REPLY_TIMEOUT = 120.0
 
     def __init__(self, cfg: GridConfig, backend: EvalBackend,
-                 max_messages: Optional[int] = None, n_workers: int = 8):
-        super().__init__(cfg, backend, max_messages=max_messages)
+                 max_messages: Optional[int] = None, n_workers: int = 8,
+                 silence_at: Optional[float] = None,
+                 silence_frac: float = 0.25):
+        super().__init__(cfg, backend, max_messages=max_messages,
+                         silence_at=silence_at, silence_frac=silence_frac)
         self.n_workers = max(1, int(n_workers))
         self.next_stamp = 0
         self._crash: Optional[BaseException] = None
@@ -491,7 +513,8 @@ class ConcurrentClientPool(SimClientPool):
                                  pending)
                     continue
                 ev = self._events[0] if self._events else None
-                while ev is not None and ev[2] in self._stopped:
+                while ev is not None and (ev[2] in self._stopped
+                                          or self._gone_silent(ev[0], ev[2])):
                     heapq.heappop(self._events)
                     ev = self._events[0] if self._events else None
                 releasable = ev is not None and all(
@@ -531,6 +554,9 @@ class ServerRunResult:
     chaos: Optional[dict] = None      # injected-fault counters + plan doc
     intake: Optional[dict] = None     # sequenced-intake counters
     request_p99_ms: Optional[float] = None  # p99 request_work round-trip
+    obs: Optional[dict] = None        # metrics-hub summary, when observed
+    subscriber: Optional[dict] = None  # live stats-poller summary
+    defense: Optional[dict] = None    # anomaly summary + recorded schedule
 
     @property
     def engines(self):
@@ -554,7 +580,12 @@ class ServerSubstrate:
                  throttle_s: float = 0.0, warm: bool = True,
                  cache: Optional[EvalCache] = None,
                  concurrent: int = 0, chaos=None,
-                 chaos_seed: Optional[int] = None):
+                 chaos_seed: Optional[int] = None,
+                 obs: bool = False, stats_interval: float = 25.0,
+                 subscribe: bool = False, defense: bool = False,
+                 defense_schedule: Optional[dict] = None,
+                 silence_at: Optional[float] = None,
+                 silence_frac: float = 0.25):
         self.specs = [specs] if isinstance(specs, SearchSpec) else list(specs)
         self.fleet = fleet
         self.backend = backend
@@ -593,6 +624,20 @@ class ServerSubstrate:
         if plan is not None and chaos_seed is not None:
             plan = dataclasses.replace(plan, seed=int(chaos_seed))
         self.chaos_plan: Optional[FaultPlan] = plan
+        # observability plane (DESIGN.md §13): ``obs`` attaches a
+        # MetricsHub sampled every ``stats_interval`` virtual seconds at
+        # applied-message boundaries; ``subscribe`` runs a live
+        # background poller over the raw transport; ``defense`` arms the
+        # anomaly detectors (``defense_schedule`` replays a recorded run
+        # instead).  Any of them implies the hub.
+        self.subscribe = bool(subscribe)
+        self.defense = bool(defense)
+        self.defense_schedule = defense_schedule
+        self.obs = bool(obs or subscribe or defense
+                        or defense_schedule is not None)
+        self.stats_interval = float(stats_interval)
+        self.silence_at = silence_at
+        self.silence_frac = float(silence_frac)
         if warm:
             # in-flight unknowns are bounded by the fleet (≤ 1 lease per
             # host), so warming the ladder to n_hosts guarantees zero
@@ -626,6 +671,20 @@ class ServerSubstrate:
             server.attach_cache(self.cache)       # status counters (§10)
             if mgr is not None:
                 mgr.attach_store(self.cache.store)
+        # obs attaches AFTER recovery: the replayed prefix re-applies with
+        # no hub (no samples), and the hub owns no replayable state — §13's
+        # recovery-compatibility argument
+        hub = None
+        fleet_defense = None
+        if self.obs:
+            from repro.obs import FleetDefense, MetricsHub
+            hub = MetricsHub(interval=self.stats_interval)
+            server.attach_hub(hub)
+            if self.defense_schedule is not None:
+                fleet_defense = FleetDefense.replay(server.registry, hub,
+                                                    self.defense_schedule)
+            elif self.defense:
+                fleet_defense = FleetDefense(server.registry, hub)
         if mgr is None:
             handler = server.handle
         else:
@@ -642,20 +701,44 @@ class ServerSubstrate:
             # run off the loop thread (blocking_handler)
             intake = SequencedIntake(handler)
             handler = intake.submit
+            server.attach_intake(intake)  # queue-depth in status + hub
+        elif self.subscribe:
+            # a live subscriber shares the handler with the serial pool:
+            # serialize them (the intake's lock does this in concurrent
+            # mode) so an unstamped poll can never interleave inside an
+            # applied message's handle+record pair
+            lock = threading.Lock()
+
+            def handler(msg, _lk=lock, _inner=handler):
+                with _lk:
+                    return _inner(msg)
         tkwargs = {}
         if self.transport_name == "tcp" and self.concurrent:
             tkwargs["blocking_handler"] = True
         transport = make_transport(self.transport_name, **tkwargs)
+        # the monitoring side-channel connects to the RAW transport: chaos
+        # draws are keyed on (host, cs), which unstamped monitoring polls
+        # do not carry — and perturbing the fault schedule with extra
+        # traffic would defeat the chaos-parity gates
+        raw_transport = transport
         if self.chaos_plan is not None:
             transport = ChaosTransport(transport, self.chaos_plan)
         transport.start(handler)
+        subscriber = None
+        if self.subscribe:
+            from repro.obs import BackgroundSubscriber
+            subscriber = BackgroundSubscriber(raw_transport.connect).start()
         if self.concurrent:
             pool = ConcurrentClientPool(self.fleet, self.eval_backend,
                                         max_messages=self.max_messages,
-                                        n_workers=self.concurrent)
+                                        n_workers=self.concurrent,
+                                        silence_at=self.silence_at,
+                                        silence_frac=self.silence_frac)
         else:
             pool = SimClientPool(self.fleet, self.eval_backend,
-                                 max_messages=self.max_messages)
+                                 max_messages=self.max_messages,
+                                 silence_at=self.silence_at,
+                                 silence_frac=self.silence_frac)
         if resume:
             pool.resume_from(server.world_view())
         conn = None
@@ -671,6 +754,8 @@ class ServerSubstrate:
             if self.cache is not None:
                 cache_status = self.cache.status()
         finally:
+            if subscriber is not None:
+                subscriber.stop()
             if conn is not None:
                 conn.close()
             transport.stop()
@@ -682,6 +767,17 @@ class ServerSubstrate:
         if pool.request_wall:
             p99 = float(np.percentile(np.asarray(pool.request_wall),
                                       99.0) * 1000.0)
+        obs_doc = None
+        if hub is not None:
+            latest = hub.latest()
+            obs_doc = {"snapshots": hub.seq, "interval": hub.interval,
+                       "ring": hub.ring,
+                       "last_registry": None if latest is None
+                       else latest["groups"].get("registry")}
+        defense_doc = None
+        if fleet_defense is not None:
+            defense_doc = dict(fleet_defense.summary())
+            defense_doc["schedule"] = fleet_defense.schedule_doc()
         return ServerRunResult(server=server, pool=pool.stats,
                                resumed=resume, replayed=replayed,
                                recovered_done=recovered_done,
@@ -693,7 +789,10 @@ class ServerSubstrate:
                                    "next_seq": intake.next_seq,
                                    "parked": intake.parked,
                                    "out_of_band": intake.out_of_band},
-                               request_p99_ms=p99)
+                               request_p99_ms=p99, obs=obs_doc,
+                               subscriber=None if subscriber is None
+                               else subscriber.summary(),
+                               defense=defense_doc)
 
 
 # -- the seeded smoke problem + CLI (dryrun's kill/restore subprocess) --------
@@ -776,6 +875,9 @@ def result_doc(res: ServerRunResult) -> dict:
         "chaos": res.chaos,
         "intake": res.intake,
         "request_p99_ms": res.request_p99_ms,
+        "obs": res.obs,
+        "subscriber": res.subscriber,
+        "defense": res.defense,
     }
 
 
@@ -826,6 +928,28 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     help="inject faults per this preset FaultPlan")
     ap.add_argument("--chaos-seed", type=int, default=None,
                     help="re-seed the chosen --chaos plan")
+    ap.add_argument("--obs", action="store_true",
+                    help="attach the metrics hub (DESIGN.md §13): sampled "
+                         "stats snapshots + the subscribe_stats wire "
+                         "extension; the trajectory is unchanged")
+    ap.add_argument("--stats-interval", type=float, default=25.0,
+                    help="virtual seconds between hub snapshots")
+    ap.add_argument("--subscribe", action="store_true",
+                    help="run a live background subscribe_stats poller "
+                         "over the transport (implies --obs)")
+    ap.add_argument("--silence-at", type=float, default=None,
+                    help="inject fleet churn: the lowest --silence-frac "
+                         "of host ids go silent at this virtual time")
+    ap.add_argument("--silence-frac", type=float, default=0.25)
+    ap.add_argument("--defense", action="store_true",
+                    help="arm the anomaly detectors: suspect cohorts are "
+                         "quarantined out of the reliable set, and the "
+                         "verdict schedule is recorded (implies --obs)")
+    ap.add_argument("--defense-out", default=None,
+                    help="write the recorded anomaly schedule JSON here")
+    ap.add_argument("--defense-replay", default=None,
+                    help="replay a recorded anomaly schedule instead of "
+                         "detecting (the solo-reproducibility twin)")
     args = ap.parse_args(argv)
 
     if args.problem == "lm":
@@ -869,14 +993,28 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         store = (JsonlCacheStore(eval_cache_path(args.ckpt_dir))
                  if args.ckpt_dir else None)
         cache = EvalCache(store, fingerprint=fp)
+    defense_schedule = None
+    if args.defense_replay:
+        with open(args.defense_replay) as f:
+            defense_schedule = json.load(f)
     sub = ServerSubstrate(spec, fleet, backend, transport=args.transport,
                           ckpt_dir=args.ckpt_dir,
                           snapshot_every=args.snapshot_every,
                           throttle_s=args.throttle_s, cache=cache,
                           concurrent=args.concurrent, chaos=args.chaos,
-                          chaos_seed=args.chaos_seed)
+                          chaos_seed=args.chaos_seed,
+                          obs=args.obs, stats_interval=args.stats_interval,
+                          subscribe=args.subscribe, defense=args.defense,
+                          defense_schedule=defense_schedule,
+                          silence_at=args.silence_at,
+                          silence_frac=args.silence_frac)
     res = sub.run(resume=args.resume)
     doc = result_doc(res)
+    if args.defense_out and res.defense is not None:
+        os.makedirs(os.path.dirname(os.path.abspath(args.defense_out)),
+                    exist_ok=True)
+        with open(args.defense_out, "w") as f:
+            json.dump(res.defense["schedule"], f, indent=2)
     doc["transport"] = args.transport
     doc["backend"] = args.backend
     doc["problem"] = args.problem
@@ -897,6 +1035,15 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                        f" retries={res.chaos['retries']}")
     if args.concurrent:
         cache_note += f" workers={args.concurrent}"
+    if res.obs is not None:
+        cache_note += f" obs_snapshots={res.obs['snapshots']}"
+    if res.subscriber is not None:
+        cache_note += (f" subscribed={res.subscriber['snapshots']}"
+                       f" stamped_ok={res.subscriber['stamped_ok']}")
+    if res.defense is not None:
+        cache_note += (f" defense={res.defense['mode']}"
+                       f" anomalies={res.defense['events']}"
+                       f" quarantined={res.defense['quarantined_now']}")
     print(f"[server.sim] transport={args.transport} backend={args.backend} "
           f"resumed={res.resumed} replayed={res.replayed} "
           f"iters={doc['iteration']} best={doc['best_fitness']:.6f} "

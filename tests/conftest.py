@@ -29,3 +29,8 @@ def pytest_configure(config):
                    "idempotent retry, concurrent-TCP chaos parity, "
                    "malformed-frame fuzz; CI's chaos-smoke job selects "
                    "them with -m chaos)")
+    config.addinivalue_line(
+        "markers", "obs: tier-1 observability-plane tests (metrics hub, "
+                   "subscribe_stats stream, anomaly-driven fleet defense, "
+                   "stamp-neutrality + observed-run parity; CI's obs-smoke "
+                   "job selects them with -m obs)")

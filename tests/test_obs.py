@@ -1,0 +1,451 @@
+"""Observability-plane tests (DESIGN.md §13).
+
+The §13 contract under test: attaching the metrics hub, a live
+``subscribe_stats`` subscriber, or the anomaly-driven fleet defense must
+never change what the engines commit — observed runs (including under
+chaos fault plans) are bit-identical to unobserved ones, monitoring
+messages are stamp-free and never logged, and a defended run is
+solo-reproducible from its recorded anomaly schedule.  The supporting
+layers get their own pins: hub ring/cursor semantics, probe rates,
+registry churn counters + cold-start "warming" accounting, quarantine
+gates, one-page-per-cohort-transition, and the rate-detector latches.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.engine import identical_trajectories
+from repro.core.substrates.eval_backend import InProcessEvalBackend
+from repro.obs import (PAGE, QUARANTINE, RELEASE, STREAM_VERSION,
+                       FleetDefense, MetricsHub)
+from repro.server import protocol
+from repro.server.registry import DEAD, SUSPECT, HostRegistry
+from repro.server.server import SequencedIntake, WorkServer
+from repro.server.sim import ServerSubstrate, smoke_problem
+
+pytestmark = pytest.mark.obs
+
+
+# -- shared small workload -----------------------------------------------------
+
+@pytest.fixture(scope="module")
+def problem():
+    return smoke_problem(n_stars=120, n_hosts=40, m=10, iterations=2)
+
+
+@pytest.fixture(scope="module")
+def backend(problem):
+    _, _, f_batch = problem
+    return InProcessEvalBackend(f_batch)
+
+
+@pytest.fixture(scope="module")
+def baseline(problem, backend):
+    spec, fleet, _ = problem
+    return ServerSubstrate(spec, fleet, backend).run()
+
+
+def _same(a, b):
+    ea, eb = a.engines[0], b.engines[0]
+    return identical_trajectories(ea, eb) and ea.stats == eb.stats
+
+
+# -- MetricsHub ----------------------------------------------------------------
+
+class TestMetricsHub:
+    def test_counters_and_probe_groups(self):
+        hub = MetricsHub(interval=5.0)
+        hub.inc("widgets")
+        hub.inc("widgets", 2)
+        assert hub.counter("widgets") == 3
+        hub.register_probe("layer", lambda: {"depth": np.int64(4),
+                                             17: "int-key"})
+        snap = hub.sample(0.0)
+        assert snap["stream_v"] == STREAM_VERSION
+        assert snap["counters"]["widgets"] == 3
+        # codec-proofing: numpy scalars become python ints, dict keys
+        # become strings (msgpack would keep int keys, JSON would not)
+        assert snap["groups"]["layer"]["depth"] == 4
+        assert type(snap["groups"]["layer"]["depth"]) is int
+        assert snap["groups"]["layer"]["17"] == "int-key"
+
+    def test_maybe_sample_interval_is_virtual_time(self):
+        hub = MetricsHub(interval=10.0)
+        assert hub.maybe_sample(3.0) is not None    # first call samples
+        assert hub.maybe_sample(5.0) is None
+        assert hub.maybe_sample(12.9) is None
+        assert hub.maybe_sample(13.0) is not None
+        assert hub.seq == 2
+
+    def test_rates_derived_from_snapshot_deltas(self):
+        hub = MetricsHub(interval=1.0)
+        state = {"messages": 0}
+        hub.register_probe("srv", lambda: dict(state), rates=("messages",))
+        hub.sample(0.0)
+        state["messages"] = 50
+        snap = hub.sample(10.0)
+        assert snap["groups"]["srv"]["messages_per_s"] == pytest.approx(5.0)
+
+    def test_ring_bounds_memory_and_cursor_resumes(self):
+        hub = MetricsHub(interval=1.0, ring=8)
+        for t in range(20):
+            hub.sample(float(t))
+        assert hub.seq == 20
+        snaps, cursor = hub.since(-1)
+        # fell off the ring: resume at the oldest retained snapshot
+        assert [s["seq"] for s in snaps] == list(range(12, 20))
+        assert cursor == 19
+        again, cursor2 = hub.since(cursor)
+        assert again == [] and cursor2 == 19
+        hub.sample(20.0)
+        fresh, cursor3 = hub.since(cursor2)
+        assert [s["seq"] for s in fresh] == [20] and cursor3 == 20
+
+    def test_series_and_on_sample_callbacks(self):
+        hub = MetricsHub(interval=1.0)
+        depth = {"v": 0}
+        hub.register_probe("g", lambda: {"depth": depth["v"]})
+        seen = []
+        hub.on_sample(lambda s: seen.append(s["seq"]))
+        for t in range(3):
+            depth["v"] = t * t
+            hub.sample(float(t))
+        assert hub.series("g", "depth") == [(0.0, 0.0), (1.0, 1.0),
+                                            (2.0, 4.0)]
+        assert seen == [0, 1, 2]
+
+
+# -- registry churn, warming, quarantine ---------------------------------------
+
+class TestRegistryChurn:
+    def test_transition_counters_count_each_edge(self):
+        reg = HostRegistry(suspect_after=10.0, dead_after=100.0)
+        for h in range(3):
+            reg.touch(h, 0.0)
+        reg.sweep(50.0)                   # all alive -> suspect
+        assert reg.churn_to_suspect == 3 and reg.churn_to_dead == 0
+        reg.sweep(60.0)                   # still suspect: NOT recounted
+        assert reg.churn_to_suspect == 3
+        reg.sweep(200.0)                  # suspect -> dead
+        assert reg.churn_to_dead == 3
+        reg.touch(1, 201.0)               # any contact revives
+        assert reg.churn_revived == 1
+        assert reg.hosts[1].state == "alive"
+        reg.sweep(300.0)                  # host 1 decays again
+        assert reg.churn_to_suspect == 4
+        d = reg.summary()["churn"]
+        assert d == {"to_suspect": 4, "to_dead": 3, "revived": 1}
+
+    def test_churn_counters_survive_state_roundtrip(self):
+        reg = HostRegistry(suspect_after=1.0, dead_after=10.0)
+        reg.touch(0, 0.0)
+        reg.sweep(5.0)
+        reg.quarantine(0)
+        clone = HostRegistry()
+        clone.load_state(reg.state_dict())
+        assert clone.churn_to_suspect == 1
+        assert clone.hosts[0].quarantined
+        assert not clone.reliable(0)
+
+    def test_pre_obs_snapshot_loads_with_default_quarantine(self):
+        reg = HostRegistry()
+        reg.touch(3, 1.0)
+        state = reg.state_dict()
+        del state["churn"]                # pre-obs snapshots have neither
+        del state["hosts"]["3"]["quarantined"]
+        clone = HostRegistry()
+        clone.load_state(state)
+        assert clone.churn_to_suspect == 0
+        assert not clone.hosts[3].quarantined
+
+    def test_warming_hosts_counted_not_omitted(self):
+        reg = HostRegistry(min_latency_samples=2)
+        for h in range(4):
+            reg.touch(h, 0.0)
+        reg.on_result(0, 1.0, turnaround=5.0)
+        s = reg.summary()
+        # the cold-start fix: hosts with no EWMA yet are "warming" and
+        # still inside the reliable-set gauge (benefit of the doubt),
+        # not silently dropped from it
+        assert s["warming"] == 3
+        assert s["reliable_set"] == 4
+
+    def test_reliable_set_matches_per_host_gate(self):
+        rng = np.random.default_rng(5)
+        reg = HostRegistry(min_latency_samples=3)
+        for h in range(12):
+            reg.touch(h, 0.0)
+            for _ in range(int(rng.integers(0, 4))):
+                reg.on_issue(h, 1.0)
+            if rng.random() < 0.7:
+                reg.on_result(h, 2.0, turnaround=float(rng.uniform(1, 50)))
+        reg.quarantine(5)
+        expect = sorted(h for h in reg.hosts if reg.reliable(h))
+        assert reg.reliable_set() == expect
+
+    def test_quarantine_gates_reliable_and_is_idempotent(self):
+        reg = HostRegistry()
+        reg.touch(0, 0.0)
+        assert reg.reliable(0)
+        assert reg.quarantine(0) is True
+        assert reg.quarantine(0) is False      # re-page is a no-op
+        assert not reg.reliable(0)
+        assert reg.release(0) is True
+        assert reg.release(0) is False
+        assert reg.reliable(0)
+
+
+# -- anomaly detection + paging ------------------------------------------------
+
+def _registry_hub(reg, interval=1.0):
+    hub = MetricsHub(interval=interval)
+    hub.register_probe("registry", lambda: {
+        **reg.summary(), "suspect_ids": reg.ids(SUSPECT),
+        "dead_ids": reg.ids(DEAD)})
+    return hub
+
+
+class TestFleetDefense:
+    def test_pages_exactly_once_per_cohort_transition(self):
+        reg = HostRegistry(suspect_after=10.0, dead_after=1000.0)
+        hub = _registry_hub(reg)
+        defense = FleetDefense(reg, hub)
+        for h in range(4):
+            reg.touch(h, 0.0)
+        reg.sweep(20.0)
+        hub.sample(20.0)
+        assert [e.action for e in defense.events] == [QUARANTINE]
+        assert defense.events[0].hosts == [0, 1, 2, 3]
+        assert all(not reg.reliable(h) for h in range(4))
+        hub.sample(21.0)                  # cohort still down: no re-page
+        hub.sample(22.0)
+        assert len(defense.events) == 1
+        reg.touch(0, 23.0)                # revival
+        hub.sample(23.0)
+        assert [e.action for e in defense.events] == [QUARANTINE, RELEASE]
+        assert defense.events[1].hosts == [0]
+        assert reg.reliable(0)
+        hub.sample(24.0)                  # no double-release
+        assert len(defense.events) == 2
+        reg.sweep(40.0)                   # host 0 decays AGAIN
+        hub.sample(40.0)                  # fresh transition: pages again
+        assert [e.action for e in defense.events] == \
+            [QUARANTINE, RELEASE, QUARANTINE]
+        assert defense.events[2].hosts == [0]
+
+    def test_rate_detectors_latch_on_edges(self):
+        reg_doc = {"returned": 0, "stale_returns": 0}
+        srv_doc = {"duplicate_reports": 0}
+        cache_doc = {"hit_rate": 0.9}
+        hub = MetricsHub(interval=1.0)
+        hub.register_probe("registry", lambda: {**reg_doc,
+                                                "suspect_ids": [],
+                                                "dead_ids": []})
+        hub.register_probe("server", lambda: dict(srv_doc))
+        hub.register_probe("cache", lambda: dict(cache_doc))
+        defense = FleetDefense(HostRegistry(), hub, stale_rate_spike=0.5,
+                               dup_spike=3, hit_rate_floor=0.2)
+        hub.sample(0.0)                   # baseline window
+        reg_doc.update(returned=10, stale_returns=8)
+        hub.sample(1.0)
+        kinds = [e.kind for e in defense.events]
+        assert kinds == ["stale_spike"]
+        reg_doc.update(returned=20, stale_returns=16)
+        hub.sample(2.0)                   # sustained spike: still latched
+        assert [e.kind for e in defense.events] == ["stale_spike"]
+        reg_doc.update(returned=30, stale_returns=16)
+        hub.sample(3.0)                   # clears -> re-arms
+        reg_doc.update(returned=40, stale_returns=26)
+        srv_doc["duplicate_reports"] = 10
+        cache_doc["hit_rate"] = 0.05      # collapse after having been high
+        hub.sample(4.0)
+        kinds = sorted(e.kind for e in defense.events)
+        assert kinds == ["cache_collapse", "dup_spike", "stale_spike",
+                         "stale_spike"]
+        assert all(e.action == PAGE and e.hosts == []
+                   for e in defense.events)
+
+    def test_cache_collapse_needs_prior_health(self):
+        hub = MetricsHub(interval=1.0)
+        cache_doc = {"hit_rate": 0.0}
+        hub.register_probe("cache", lambda: dict(cache_doc))
+        defense = FleetDefense(HostRegistry(), hub, hit_rate_floor=0.2)
+        hub.sample(0.0)
+        hub.sample(1.0)
+        # a cache that was NEVER healthy (cold start) is not a collapse
+        assert defense.events == []
+
+    def test_schedule_roundtrips_and_replay_applies_gate_actions(self):
+        reg = HostRegistry(suspect_after=10.0, dead_after=1000.0)
+        hub = _registry_hub(reg)
+        live = FleetDefense(reg, hub)
+        for h in range(3):
+            reg.touch(h, 0.0)
+        reg.sweep(20.0)
+        hub.sample(20.0)
+        doc = live.schedule_doc()
+        assert doc["v"] == 1 and len(doc["events"]) == 1
+
+        reg2 = HostRegistry(suspect_after=10.0, dead_after=1000.0)
+        hub2 = _registry_hub(reg2)
+        replay = FleetDefense.replay(reg2, hub2, doc)
+        assert not replay.live
+        for h in range(3):
+            reg2.touch(h, 0.0)
+        hub2.sample(5.0)                  # seq 0: the recorded event fires
+        assert [e.action for e in replay.events] == [QUARANTINE]
+        assert all(not reg2.reliable(h) for h in range(3))
+        assert replay.summary()["mode"] == "replay"
+
+    def test_replay_rejects_wrong_schedule_version(self):
+        hub = MetricsHub(interval=1.0)
+        with pytest.raises(ValueError, match="version"):
+            FleetDefense.replay(HostRegistry(), hub,
+                                {"v": 99, "events": []})
+
+
+# -- the wire extension + stamp neutrality -------------------------------------
+
+class TestSubscribeStats:
+    def _server(self, problem, with_hub=True):
+        spec, fleet, _ = problem
+        srv = WorkServer([spec], lease_timeout=8.0 * fleet.base_eval_time,
+                         idle_retry=fleet.idle_retry)
+        hub = None
+        if with_hub:
+            hub = MetricsHub(interval=5.0)
+            srv.attach_hub(hub)
+        return srv, hub
+
+    def test_error_reply_without_hub(self, problem):
+        srv, _ = self._server(problem, with_hub=False)
+        rep = srv.handle(protocol.subscribe_stats())
+        assert rep["kind"] == "error"
+
+    def test_cursor_long_poll_over_the_handler(self, problem):
+        srv, hub = self._server(problem)
+        srv.handle(protocol.register(0, 1.0, cs=0))
+        srv.handle(protocol.request_work(0, 1.0, cs=1))
+        rep = srv.handle(protocol.subscribe_stats(-1))
+        assert rep["kind"] == "stats" and rep["stream_v"] == STREAM_VERSION
+        assert len(rep["snapshots"]) >= 1
+        assert rep["snapshots"][0]["groups"]["server"]["messages"] >= 1
+        assert "lease_depth" in rep["snapshots"][0]["groups"]["server"]
+        cursor = rep["cursor"]
+        again = srv.handle(protocol.subscribe_stats(cursor))
+        assert again["snapshots"] == [] and again["cursor"] == cursor
+
+    def test_monitoring_is_unstamped_uncounted_unlogged(self, problem,
+                                                        tmp_path):
+        from repro.server.checkpoint import CheckpointManager
+        srv, hub = self._server(problem)
+        mgr = CheckpointManager(str(tmp_path / "ckpt"), snapshot_every=10)
+        msg = protocol.register(0, 1.0, cs=0)
+        srv.handle(msg)
+        mgr.record(msg, srv)
+        before_messages = srv.counters.messages
+        before_seq = hub.seq
+        rep = srv.handle(protocol.subscribe_stats(-1))
+        mgr.record({"kind": "subscribe_stats", "since": -1}, srv)
+        assert rep["kind"] == "stats"
+        # a monitoring poll consumes nothing: no message count, no log
+        # record, no extra hub sample, and last_applied stays False so
+        # even the fallback logging path would skip it
+        assert srv.counters.messages == before_messages
+        assert hub.seq == before_seq
+        assert srv.last_applied is False
+        assert mgr.seq == 1               # only the register was logged
+        mgr.close()
+
+    def test_sequenced_intake_handles_unstamped_poll_inline(self, problem):
+        srv, hub = self._server(problem)
+        intake = SequencedIntake(srv.handle)
+        srv.attach_intake(intake)
+        rep = intake.submit(protocol.subscribe_stats(-1))
+        assert rep["kind"] == "stats"
+        assert intake.next_seq == 0       # no stamp consumed
+        # the status satellite: service pressure rides the status reply
+        status = intake.submit(protocol.status())
+        assert status["intake"] == {"next_seq": 0, "parked": 0,
+                                    "out_of_band": 0}
+        assert "leases" in status
+
+    def test_status_intake_is_none_without_intake(self, problem):
+        srv, _ = self._server(problem)
+        assert srv.handle(protocol.status())["intake"] is None
+
+
+# -- observed-run parity (the tentpole gate) -----------------------------------
+
+class TestObservedParity:
+    def test_observed_serial_run_is_bit_identical(self, problem, backend,
+                                                  baseline):
+        spec, fleet, _ = problem
+        res = ServerSubstrate(spec, fleet, backend, obs=True,
+                              stats_interval=10.0).run()
+        assert _same(baseline, res)
+        assert res.obs["snapshots"] >= 2
+
+    @pytest.mark.parametrize("preset", ["drop_dup", "reset_torn"])
+    def test_observed_subscribed_chaos_run_is_bit_identical(
+            self, problem, backend, baseline, preset):
+        spec, fleet, _ = problem
+        res = ServerSubstrate(spec, fleet, backend, obs=True,
+                              subscribe=True, stats_interval=10.0,
+                              transport="tcp", concurrent=4,
+                              chaos=preset).run()
+        assert _same(baseline, res)
+        assert res.subscriber["snapshots"] >= 2
+        assert res.subscriber["stamped_ok"]
+        assert not res.subscriber["errors"]
+
+    def test_defense_shrinks_reliable_set_and_replays_identically(
+            self, problem, backend):
+        spec, fleet, _ = problem
+        silence = dict(silence_at=120.0, silence_frac=0.25)
+        undefended = ServerSubstrate(spec, fleet, backend, **silence).run()
+        defended = ServerSubstrate(spec, fleet, backend, defense=True,
+                                   stats_interval=10.0, **silence).run()
+        d = defended.defense
+        assert d["mode"] == "live" and d["quarantined_now"] > 0
+        assert (defended.server.registry.summary()["reliable_set"]
+                < undefended.server.registry.summary()["reliable_set"])
+        replayed = ServerSubstrate(spec, fleet, backend,
+                                   defense_schedule=d["schedule"],
+                                   stats_interval=10.0, **silence).run()
+        assert _same(defended, replayed)
+        assert replayed.defense["mode"] == "replay"
+        assert (replayed.defense["quarantined_now"]
+                == d["quarantined_now"])
+
+
+# -- dashboard rendering -------------------------------------------------------
+
+class TestDashboard:
+    def test_render_is_pure_and_complete(self):
+        from repro.launch.obs_dashboard import render, sparkline
+        snap = {"stream_v": 1, "seq": 7, "now": 123.4, "counters": {},
+                "groups": {
+                    "server": {"messages": 99, "messages_per_s": 4.5,
+                               "lease_depth": 3, "lapsed_depth": 1,
+                               "searches": [{"search_id": 0,
+                                             "status": "running",
+                                             "phase": "regression",
+                                             "iteration": 2,
+                                             "best": 1.25}]},
+                    "registry": {"hosts": 8,
+                                 "states": {"alive": 6, "suspect": 2,
+                                            "dead": 0},
+                                 "warming": 1, "reliable_set": 5,
+                                 "quarantined": 2,
+                                 "churn": {"to_suspect": 2, "to_dead": 0,
+                                           "revived": 0}}}}
+        out = render(snap, [1.0, 2.0, 4.5])
+        for needle in ("seq=7", "99 messages", "4.5 msg/s", "3 leases",
+                       "suspect 2", "quarantined 2", "phase=regression",
+                       "best=1.250000"):
+            assert needle in out, needle
+        assert sparkline([]) == ""
+        assert len(sparkline(list(range(100)), width=24)) == 24
+        assert sparkline([5.0, 5.0]) == "▁▁"    # flat series: no div-by-0
