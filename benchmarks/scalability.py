@@ -596,11 +596,14 @@ def _chaos_degraded_row(n_hosts: int, n_stars: int, m: int, iters: int):
 
 
 def _obs_overhead_row(n_hosts: int, n_stars: int, m: int, iters: int):
-    """Observability overhead (DESIGN.md §13): the SAME seeded loopback
-    search two ways over one warmed backend — unobserved, and with the
-    metrics hub attached at its default 25-unit virtual-time sampling
-    cadence (no live subscriber: the gate prices the always-on hub the
-    way a production run carries it, not an optional reader).  One
+    """Observability overhead (DESIGN.md §13/§14): the SAME seeded
+    loopback search two ways over one warmed backend — unobserved, and
+    with the FULL post-mortem plane attached: the metrics hub at its
+    default 25-unit virtual-time sampling cadence, durable retention
+    spilling every snapshot into a JSONL store, and every workunit's
+    lifecycle traced (no live subscriber: the gate prices the always-on
+    plane the way a production run carries it, not an optional reader).
+    One
     measurement block is the ratio of TOTAL interleaved wall over
     ``OBS_REPS`` back-to-back pairs: summing across pairs averages out
     load bursts that dwarf a single sub-second rep, and the order WITHIN
@@ -641,10 +644,23 @@ def _obs_overhead_row(n_hosts: int, n_stars: int, m: int, iters: int):
         anm=anm_cfg, grid=grid_cfg, engine_seed=7)
 
     def run_one(obs):
-        sub = ServerSubstrate(spec, grid_cfg, backend, obs=obs, warm=False)
+        # the observed leg carries the FULL §14 plane the way a
+        # production post-mortem-ready run would: hub + durable retention
+        # (fresh store per rep, so later reps never pay a larger reopen
+        # scan) + every workunit traced.  Store writes/flushes are inside
+        # the timed region; only the tempdir cleanup is not.
+        import shutil
+        import tempfile
+        rdir = tempfile.mkdtemp(prefix="obs_row_") if obs else None
+        kw = {} if rdir is None else dict(retain_dir=rdir, trace_rate=1.0)
+        sub = ServerSubstrate(spec, grid_cfg, backend, obs=obs, warm=False,
+                              **kw)
         t0 = time.perf_counter()
         res = sub.run()
-        return res, time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        if rdir is not None:
+            shutil.rmtree(rdir, ignore_errors=True)
+        return res, dt
 
     run_one(False), run_one(True)          # warm jits + the obs import path
     t_un, t_ob, res_un, res_ob = [], [], None, None
@@ -686,6 +702,8 @@ def _obs_overhead_row(n_hosts: int, n_stars: int, m: int, iters: int):
         "messages": res_ob.pool.messages,
         "snapshots": res_ob.obs["snapshots"],
         "stats_interval": res_ob.obs["interval"],
+        "retention": res_ob.retention,
+        "trace": res_ob.trace,
         "pair_ratios": [round(r, 4) for r in pair_ratios],
         "block_ratios": [round(r, 4) for r in block_ratios],
         "total_wall_ratio": ratio,

@@ -154,7 +154,8 @@ class SearchDirector:
                  specs: Sequence[SearchSpec], policy: str = "fixed", *,
                  kill_margin: float = 0.5, probation_iterations: int = 2,
                  max_restarts: int = 0, restart_sigma: float = 0.25,
-                 seed: int = 0, max_rounds: int = 10_000_000):
+                 seed: int = 0, max_rounds: int = 10_000_000,
+                 kill_schedule: Optional[dict] = None):
         if policy not in ("fixed", "portfolio", "restart"):
             raise ValueError(f"unknown policy {policy!r}")
         self.scheduler = scheduler
@@ -167,6 +168,16 @@ class SearchDirector:
         self.max_rounds = max_rounds
         self._rng = np.random.default_rng(seed)
         self._restarts_used = 0
+        # §14 director-level replay seam: a recorded ``kill_log`` from a
+        # defended run ({name: round}) re-applied at the same round
+        # boundaries — the director twin of the FleetDefense schedule.
+        # A round boundary is a pure function of the scheduling sequence,
+        # so a scheduled kill lands at the same committed prefix in any
+        # two runs of the same specs.
+        self.kill_schedule = dict(kill_schedule) if kill_schedule else None
+        self.kill_log: List[dict] = []
+        self._live: List[LiveSearch] = []
+        self._round = 0
 
     # -- policy helpers ------------------------------------------------------
 
@@ -214,6 +225,29 @@ class SearchDirector:
         ls.grid_stats = ls.grid.finish()   # drain in-flight buckets
         ls.status = status
 
+    def kill_search(self, name) -> bool:
+        """Director seam (§14): retire one live search by verdict —
+        ``name`` is the spec name or the admission ``search_id``.  The
+        kill is logged with the current round, so ``kill_log`` re-applied
+        as ``kill_schedule`` reproduces it at the same boundary.  Safe to
+        call from a ``FleetDefense`` verdict between rounds; a name that
+        is not live is a no-op (False)."""
+        for ls in list(self._live):
+            if ls.spec.name == name or ls.search_id == name:
+                self._live.remove(ls)
+                self._retire(ls, KILLED)
+                self.kill_log.append({"name": ls.spec.name,
+                                      "round": self._round})
+                return True
+        return False
+
+    def _apply_kill_schedule(self) -> None:
+        if not self.kill_schedule:
+            return
+        for name, rnd in self.kill_schedule.items():
+            if int(rnd) == self._round:
+                self.kill_search(name)
+
     # -- the run loop --------------------------------------------------------
 
     def run(self, max_ticks: int = 1_000_000,
@@ -223,12 +257,17 @@ class SearchDirector:
             sched.warm(len(self.specs[0].x0), self.specs)
         live = [sched.admit(spec, i, max_ticks, max_sim_time)
                 for i, spec in enumerate(self.specs)]
+        self._live = live                  # the kill seam's target list
         everyone = list(live)
         next_id = len(live)
         rounds = 0
+        self._round = 0
+        self._apply_kill_schedule()        # round-0 kills: before any step
         while live and rounds < self.max_rounds:
             finished = sched.round(live)
             rounds += 1
+            self._round = rounds
+            self._apply_kill_schedule()
             for ls in finished:
                 live.remove(ls)
                 self._retire(ls, DONE)

@@ -1288,6 +1288,244 @@ def run_obs_server_smoke(out_dir: str, n_hosts: int = 48, m: int = 12,
     return ok
 
 
+def run_postmortem_smoke(out_dir: str, n_hosts: int = 48, m: int = 12,
+                         iterations: int = 3, n_stars: int = 200,
+                         n_clients: int = 8) -> bool:
+    """Post-mortem-plane smoke (``--substrate postmortem``, DESIGN.md
+    §14).  Same silenced smoke world as the obs_server smoke; four legs:
+
+      1. the UNOBSERVED serial loopback baseline;
+      2. retention byte-compatibility: two checkpointed runs — retention
+         plus full tracing ON vs OFF — must write byte-identical replay
+         logs (the §14 recovery-compatibility argument) and both match
+         the baseline trajectory;
+      3. flight recorder under fire: chaotic concurrent TCP with
+         retention + tracing, SIGKILLed mid-run.  The CLI
+         (``repro.launch.obs_postmortem``) must reconstruct the dead
+         server's timeline from the surviving store (epoch 1: snapshots,
+         spans, phase transitions, replay-log extent) WITHOUT writing an
+         epoch marker; the restored run then appends under epoch 2 and
+         its trajectory is bit-identical to the baseline;
+      4. windowed stall defense: ``--stall-window`` kills the stalled
+         search through the director seam, the verdict is recorded in
+         the anomaly schedule, and a REPLAY run applies the recorded
+         kill at the recorded seq — bit-identical to the defended run
+         (which, having been truncated by the kill, differs from the
+         undefended baseline).
+
+    Writes artifacts/dryrun/substrate_postmortem.json; returns pass/fail.
+    """
+    import shutil
+    import signal
+    import subprocess
+    import sys
+    import tempfile
+
+    child_env = {k: v for k, v in os.environ.items() if k != "XLA_FLAGS"}
+    child_env["JAX_PLATFORMS"] = "cpu"
+    src_dir = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                           ".."))
+    child_env["PYTHONPATH"] = src_dir + (
+        ":" + child_env["PYTHONPATH"] if child_env.get("PYTHONPATH") else "")
+    spec_args = ["--n-hosts", str(n_hosts), "--m", str(m),
+                 "--iterations", str(iterations), "--n-stars", str(n_stars),
+                 "--silence-at", "150", "--silence-frac", "0.25"]
+    retain_args = ["--retain", "--trace-rate", "1.0",
+                   "--stats-interval", "10"]
+    conc_args = ["--transport", "tcp", "--concurrent", str(n_clients)]
+
+    def child(extra, timeout=600, module="repro.server.sim"):
+        cmd = [sys.executable, "-m", module] + extra
+        return subprocess.run(cmd, env=child_env, timeout=timeout,
+                              capture_output=True, text=True)
+
+    def load(path):
+        with open(path) as f:
+            return json.load(f)
+
+    def trajectories_equal(a, b):
+        return (a["history"] == b["history"]
+                and a["iteration"] == b["iteration"]
+                and a["best_fitness"] == b["best_fitness"]
+                and a["engine_stats"] == b["engine_stats"])
+
+    tmp = tempfile.mkdtemp(prefix="postmortem_smoke_")
+    report = {"n_hosts": n_hosts, "m": m, "iterations": iterations,
+              "n_clients": n_clients, "silence_at": 150.0,
+              "silence_frac": 0.25}
+    ok = True
+    try:
+        # 1: the unobserved baseline
+        base_path = os.path.join(tmp, "base.json")
+        r = child([*spec_args, "--out", base_path])
+        if r.returncode != 0:
+            print(r.stdout + r.stderr)
+            raise RuntimeError("unobserved baseline child failed")
+        base = load(base_path)
+
+        # 2: replay logs byte-compatible with retention on/off
+        ck_off = os.path.join(tmp, "ck_off")
+        ck_on = os.path.join(tmp, "ck_on")
+        off_path = os.path.join(tmp, "retain_off.json")
+        on_path = os.path.join(tmp, "retain_on.json")
+        r = child([*spec_args, "--ckpt-dir", ck_off, "--snapshot-every",
+                   "150", "--out", off_path])
+        if r.returncode != 0:
+            print(r.stdout + r.stderr)
+            raise RuntimeError("retention-off child failed")
+        r = child([*spec_args, "--ckpt-dir", ck_on, "--snapshot-every",
+                   "150", *retain_args, "--out", on_path])
+        if r.returncode != 0:
+            print(r.stdout + r.stderr)
+            raise RuntimeError("retention-on child failed")
+        with open(os.path.join(ck_off, "replay.jsonl"), "rb") as f:
+            log_off = f.read()
+        with open(os.path.join(ck_on, "replay.jsonl"), "rb") as f:
+            log_on = f.read()
+        on_doc = load(on_path)
+        bytes_ok = (log_off == log_on and len(log_off) > 0
+                    and trajectories_equal(base, load(off_path))
+                    and trajectories_equal(base, on_doc)
+                    and on_doc["retention"]["snapshots_stored"] > 0
+                    and on_doc["retention"]["spans_stored"] > 0)
+        report["replay_log_byte_compat"] = {
+            "bytes": len(log_off), "identical": log_off == log_on,
+            "retention": on_doc["retention"], "trace": on_doc["trace"],
+            "ok": bytes_ok}
+        ok = ok and bytes_ok
+
+        # 3: chaotic TCP + retention + tracing, SIGKILL, reconstruct,
+        # restore under a new epoch
+        ckpt = os.path.join(tmp, "ckpt_pm")
+        kill_args = [*spec_args, *conc_args, "--chaos", "drop_dup",
+                     *retain_args, "--ckpt-dir", ckpt,
+                     "--snapshot-every", "150", "--throttle-s", "0.002"]
+        proc = subprocess.Popen(
+            [sys.executable, "-m", "repro.server.sim", *kill_args],
+            env=child_env, stdout=subprocess.PIPE, stderr=subprocess.PIPE)
+        log_path = os.path.join(ckpt, "replay.jsonl")
+        deadline = time.time() + 300
+        killed_mid_run = False
+        kill_after = max(150, int(0.4 * base["pool"]["messages"]))
+        while time.time() < deadline:
+            if proc.poll() is not None:
+                break
+            has_snap = os.path.isdir(ckpt) and any(
+                f.startswith("snapshot_") for f in os.listdir(ckpt))
+            log_lines = 0
+            if os.path.exists(log_path):
+                with open(log_path, "rb") as f:
+                    log_lines = f.read().count(b"\n")
+            if has_snap and log_lines >= kill_after:
+                proc.send_signal(signal.SIGKILL)
+                proc.wait(timeout=30)
+                killed_mid_run = True
+                break
+            time.sleep(0.02)
+        if not killed_mid_run:
+            proc.kill()
+            report["flight_recorder"] = {"killed_mid_run": False,
+                                         "ok": False}
+            ok = False
+        else:
+            # the CLI reconstructs the DEAD run's timeline, read-only
+            pm_dead = os.path.join(tmp, "pm_dead.json")
+            r = child(["--ckpt-dir", ckpt, "--json", "--out", pm_dead],
+                      module="repro.launch.obs_postmortem")
+            if r.returncode != 0:
+                print(r.stdout + r.stderr)
+                raise RuntimeError("postmortem CLI failed on dead store")
+            dead = load(pm_dead)
+            dead_ok = (dead["store"]["epochs"] == [1]
+                       and dead["store"]["records"] > 0
+                       and dead["spans"] > 0
+                       and len(dead["phases"]) > 0
+                       and dead["replay_log"]["records"] >= kill_after)
+            out_path = os.path.join(tmp, "resume_pm.json")
+            r = child([*kill_args, "--resume", "--out", out_path])
+            if r.returncode != 0:
+                print(r.stdout + r.stderr)
+                report["flight_recorder"] = {"killed_mid_run": True,
+                                             "dead_report_ok": dead_ok,
+                                             "ok": False,
+                                             "error": "resume failed"}
+                ok = False
+            else:
+                res = load(out_path)
+                pm_post = os.path.join(tmp, "pm_post.json")
+                r = child(["--ckpt-dir", ckpt, "--json", "--out", pm_post],
+                          module="repro.launch.obs_postmortem")
+                post = load(pm_post) if r.returncode == 0 else {}
+                # the read-only CLI added no epoch; the restored server
+                # appended under epoch 2
+                epochs_ok = post.get("store", {}).get("epochs") == [1, 2]
+                k_ok = (dead_ok and epochs_ok
+                        and trajectories_equal(base, res)
+                        and not res["recovered_done"])
+                report["flight_recorder"] = {
+                    "killed_mid_run": True,
+                    "dead_epochs": dead["store"]["epochs"],
+                    "dead_snapshots": dead["store"]["by_type"].get("snap"),
+                    "dead_spans": dead["spans"],
+                    "dead_phase_transitions": len(dead["phases"]),
+                    "replay_log_records": dead["replay_log"]["records"],
+                    "post_restore_epochs":
+                        post.get("store", {}).get("epochs"),
+                    "replayed": res["replayed"],
+                    "trajectory_equal": trajectories_equal(base, res),
+                    "ok": k_ok}
+                ok = ok and k_ok
+
+        # 4: stall-window kill recorded live, replayed bit-identically
+        sched_path = os.path.join(tmp, "stall_schedule.json")
+        def_path = os.path.join(tmp, "stalled.json")
+        stall_args = ["--stats-interval", "10", "--stall-window", "3"]
+        r = child([*spec_args, *stall_args, "--defense-out", sched_path,
+                   "--out", def_path])
+        if r.returncode != 0:
+            print(r.stdout + r.stderr)
+            raise RuntimeError("stall-defense child failed")
+        defended = load(def_path)
+        d = defended["defense"]
+        rep_path = os.path.join(tmp, "stall_replayed.json")
+        r = child([*spec_args, "--stats-interval", "10",
+                   "--defense-replay", sched_path, "--out", rep_path])
+        if r.returncode != 0:
+            print(r.stdout + r.stderr)
+            raise RuntimeError("stall-replay child failed")
+        replayed = load(rep_path)
+        stall_ok = (d["searches_killed"] == [0]
+                    and d["by_action"].get("kill_search", 0) >= 1
+                    and trajectories_equal(defended, replayed)
+                    and replayed["defense"]["searches_killed"] == [0]
+                    and replayed["defense"]["mode"] == "replay"
+                    and defended["iteration"] < base["iteration"])
+        report["stall_kill"] = {
+            "searches_killed": d["searches_killed"],
+            "by_action": d["by_action"],
+            "defended_iteration": defended["iteration"],
+            "baseline_iteration": base["iteration"],
+            "replay_trajectory_equal": trajectories_equal(defended,
+                                                          replayed),
+            "ok": stall_ok}
+        ok = ok and stall_ok
+    except Exception as e:  # noqa: BLE001 — smoke must report, not die
+        report["error"] = str(e)
+        ok = False
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+    report["parity_ok"] = ok
+    path = os.path.join(out_dir, "substrate_postmortem.json")
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"[{'ok' if ok else 'FAIL'}] substrate postmortem: "
+          f"bytes={report.get('replay_log_byte_compat', {}).get('ok')} "
+          f"recorder={report.get('flight_recorder', {}).get('ok')} "
+          f"stall={report.get('stall_kill', {}).get('ok')} "
+          f"-> {path}")
+    return ok
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)

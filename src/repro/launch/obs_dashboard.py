@@ -43,14 +43,20 @@ def sparkline(values: Sequence[float], width: int = 24) -> str:
                    for v in vs)
 
 
-def render(snap: dict, rate_history: Sequence[float] = ()) -> str:
+def render(snap: dict, rate_history: Sequence[float] = (),
+           dropped: int = 0) -> str:
     """One snapshot as a compact terminal block (pure function: testable
-    without a terminal or a server)."""
+    without a terminal or a server).  ``dropped`` is the ring-gap count
+    the stats reply carried for this batch — rendered loudly rather than
+    letting seqs silently skip (§14 satellite)."""
     g = snap.get("groups", {})
     srv = g.get("server", {})
     reg = g.get("registry", {})
     lines = [f"-- obs snapshot seq={snap['seq']} t={snap['now']:.1f} "
              f"(stream v{snap['stream_v']})"]
+    if dropped:
+        lines.append(f"   !! gap: {dropped} snapshots fell off the ring "
+                     f"before this one")
     rate = srv.get("messages_per_s")
     rate_s = "" if rate is None else f" ({rate:.1f} msg/s)"
     lines.append(
@@ -109,7 +115,13 @@ def watch(connect, *, as_json: bool = False, poll_s: float = 0.25,
             except (ProtocolError, OSError) as e:
                 print(f"[obs] stream ended: {e}", file=out)
                 break
-            for snap in snaps:
+            gap = sub.last_dropped
+            if gap and as_json:
+                # a distinct record kind, so snapshot consumers that key
+                # on ``seq`` can skip it while gap-aware ones alert
+                print(json.dumps({"kind": "gap", "dropped": int(gap)}),
+                      file=out, flush=True)
+            for i, snap in enumerate(snaps):
                 r = snap.get("groups", {}).get("server", {}) \
                     .get("messages_per_s")
                 if isinstance(r, (int, float)):
@@ -117,7 +129,8 @@ def watch(connect, *, as_json: bool = False, poll_s: float = 0.25,
                 if as_json:
                     print(json.dumps(snap), file=out, flush=True)
                 else:
-                    print(render(snap, rates), file=out, flush=True)
+                    print(render(snap, rates, dropped=gap if i == 0 else 0),
+                          file=out, flush=True)
                 shown += 1
                 if max_snapshots is not None and shown >= max_snapshots:
                     return shown

@@ -76,6 +76,15 @@ SUBSTRATES: Dict[str, SubstrateSmoke] = {
         "baseline; injected fleet silence paged out by the anomaly "
         "defense, replayed bit-identically from its recorded schedule",
         "repro.launch.dryrun:run_obs_server_smoke"),
+    "postmortem": SubstrateSmoke(
+        "postmortem",
+        "flight recorder: durable snapshot/trace retention under chaotic "
+        "concurrent TCP, SIGKILLed mid-run; the post-mortem CLI "
+        "reconstructs the dead server's timeline read-only, the restored "
+        "run appends under a new epoch bit-identically, replay logs stay "
+        "byte-compatible with retention on/off, and a recorded stall-kill "
+        "schedule replays bit-identically through the director seam",
+        "repro.launch.dryrun:run_postmortem_smoke"),
 }
 
 

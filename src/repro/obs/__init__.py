@@ -1,16 +1,27 @@
-"""Live observability plane (DESIGN.md §13): MetricsHub counters/probes,
-the ``subscribe_stats`` stream, and anomaly-driven fleet defense."""
-from repro.obs.anomaly import (PAGE, QUARANTINE, RELEASE, SCHEDULE_VERSION,
-                               AnomalyEvent, FleetDefense)
+"""Observability plane: the live half (DESIGN.md §13 — MetricsHub
+counters/probes, the ``subscribe_stats`` stream, anomaly-driven fleet
+defense) and the post-mortem half (§14 — durable snapshot/trace
+retention, workunit lifecycle tracing, windowed drift defense)."""
+from repro.obs.anomaly import (KILL, PAGE, QUARANTINE, RELEASE,
+                               SCHEDULE_VERSION, AnomalyEvent, FleetDefense)
 from repro.obs.metrics import (STREAM_VERSION, MetricsHub, attach_cache,
                                attach_coalescer, attach_engine, attach_grid,
                                attach_intake)
+from repro.obs.retention import (OBS_STORE_DB, OBS_STORE_NAME, STORE_VERSION,
+                                 RetentionSink, SnapshotStore,
+                                 SqliteSnapshotStore, obs_store_path,
+                                 open_snapshot_store)
 from repro.obs.stream import BackgroundSubscriber, StatsSubscriber
+from repro.obs.trace import TRACE_VERSION, WorkUnitTracer, wu_sampled
 
 __all__ = [
     "MetricsHub", "STREAM_VERSION", "attach_engine", "attach_grid",
     "attach_coalescer", "attach_cache", "attach_intake",
     "AnomalyEvent", "FleetDefense", "SCHEDULE_VERSION",
-    "QUARANTINE", "RELEASE", "PAGE",
+    "QUARANTINE", "RELEASE", "PAGE", "KILL",
     "StatsSubscriber", "BackgroundSubscriber",
+    "SnapshotStore", "SqliteSnapshotStore", "RetentionSink",
+    "open_snapshot_store", "obs_store_path", "STORE_VERSION",
+    "OBS_STORE_NAME", "OBS_STORE_DB",
+    "WorkUnitTracer", "wu_sampled", "TRACE_VERSION",
 ]

@@ -160,13 +160,20 @@ class MetricsHub:
     def latest(self) -> Optional[dict]:
         return self._snapshots[-1] if self._snapshots else None
 
-    def since(self, cursor: int) -> Tuple[List[dict], int]:
-        """Snapshots with ``seq > cursor`` (oldest first) plus the new
-        cursor.  A consumer that fell off the ring simply resumes at the
-        oldest retained snapshot — by design, not an error."""
+    def since(self, cursor: int) -> Tuple[List[dict], int, int]:
+        """Snapshots with ``seq > cursor`` (oldest first), the new cursor,
+        and the count of snapshots the cursor missed because the ring
+        already dropped them.  A consumer that fell off the ring resumes
+        at the oldest retained snapshot — by design, not an error — but
+        the gap is reported, not silent (§14 satellite)."""
         out = [s for s in self._snapshots if s["seq"] > cursor]
         new_cursor = out[-1]["seq"] if out else max(cursor, self._seq - 1)
-        return out, new_cursor
+        if self._snapshots:
+            oldest = self._snapshots[0]["seq"]
+        else:
+            oldest = self._seq                 # nothing retained at all
+        dropped = max(0, oldest - max(cursor, -1) - 1)
+        return out, new_cursor, dropped
 
     def series(self, group: str, key: str) -> List[Tuple[float, float]]:
         """One gauge's retained time-series: [(now, value), ...] — the

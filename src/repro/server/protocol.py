@@ -201,13 +201,19 @@ def status() -> dict:
     return {"kind": "status"}
 
 
-def subscribe_stats(since: int = -1) -> dict:
+def subscribe_stats(since: int = -1, from_store: bool = False) -> dict:
     """Long-poll the server's metrics ring for snapshots with
     ``seq > since``.  Deliberately stamp-free, like ``status``: a
     monitoring poll must never consume an intake stamp or a (host, cs)
     slot, so it can interleave with the applied stream at any rate
-    without perturbing it."""
-    return {"kind": "subscribe_stats", "since": int(since)}
+    without perturbing it.  ``from_store=True`` asks the server to
+    backfill snapshots the ring already dropped from its retention
+    store, when one is attached (§14) — the key rides the wire only
+    when set, so old servers never see it."""
+    msg = {"kind": "subscribe_stats", "since": int(since)}
+    if from_store:
+        msg["from_store"] = True
+    return msg
 
 
 # -- reply builders (server) --------------------------------------------------
@@ -232,10 +238,13 @@ def ack_reply(done: bool, iteration: int, best: float) -> dict:
 
 
 def stats_reply(snapshots, cursor: int, interval: float,
-                stream_v: int) -> dict:
+                stream_v: int, dropped: int = 0) -> dict:
+    # ``dropped``: snapshots the caller's cursor missed because the ring
+    # (minus any store backfill) already evicted them — an explicit gap
+    # signal instead of silently skipped seqs (§14 satellite)
     return {"kind": "stats", "snapshots": list(snapshots),
             "cursor": int(cursor), "interval": float(interval),
-            "stream_v": int(stream_v)}
+            "stream_v": int(stream_v), "dropped": int(dropped)}
 
 
 def error_reply(msg: str) -> dict:

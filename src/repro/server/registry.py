@@ -315,8 +315,19 @@ class HostRegistry:
         # warming count IS ``_warming``.  include_ids adds the
         # suspect/dead cohort id lists the anomaly detector pages on
         # (maintained sets).
-        lat = [t for r in self.hosts.values()
-               if (t := r.__dict__["ewma_latency"]) is not None]
+        lat: list = []
+        by_state: dict = {}   # state -> [sum, count], same single pass
+        for r in self.hosts.values():
+            d = r.__dict__
+            t = d["ewma_latency"]
+            if t is not None:
+                lat.append(t)
+                b = by_state.get(d["state"])
+                if b is None:
+                    by_state[d["state"]] = [t, 1]
+                else:
+                    b[0] += t
+                    b[1] += 1
         med = _median(lat)
         if self._quarantined or self._excluded:
             min_iss, min_rate = self.min_issued_for_rate, self.min_return_rate
@@ -337,6 +348,9 @@ class HostRegistry:
             "issued": self._issued_total, "returned": self._returned_total,
             "stale_returns": self._stale_total,
             "median_latency": med,
+            # §14 window-detector feed: mean turnaround per state cohort
+            "latency_by_state": {s: b[0] / b[1]
+                                 for s, b in by_state.items()},
             "excluded_by_return_rate": self._excluded,
             # §13 fleet-health gauges: cold-start hosts are "warming", not
             # invisible; the reliable set is the defended surface

@@ -198,6 +198,10 @@ class WorkServer:
         # counters, so neither can perturb the replay contract
         self._hub = None
         self._intake_probe = None
+        # §14 post-mortem plane, same contract: tracer hooks only read
+        # lease state, the retention store is only read to serve backfill
+        self._tracer = None
+        self._retention = None
         # idempotency layer (DESIGN.md §12): per-host last applied client
         # sequence number + the reply it produced.  Clients are serial per
         # host (one logical message in flight), so a window of 1 is exact:
@@ -257,6 +261,31 @@ class WorkServer:
                                rates=("hits", "misses"))
         if self._intake_probe is not None:
             hub.register_probe("intake", self._intake_probe, plain=True)
+
+    def attach_tracer(self, tracer) -> None:
+        """Hook a ``WorkUnitTracer`` (§14) onto the lease lifecycle paths:
+        issue, lapse, settle.  Every hook sits behind one ``is not None``
+        compare and only READS lease state — the tracer owns no replayable
+        state and is not in ``state_dict``, so tracing cannot perturb the
+        applied sequence (the §13 argument, unchanged)."""
+        self._tracer = tracer
+
+    def attach_retention(self, store) -> None:
+        """Expose a retention ``SnapshotStore`` for ``subscribe_stats``
+        ``from_store`` backfill and the ``status`` obs block.  The server
+        only READS it — the ``RetentionSink`` is the writer."""
+        self._retention = store
+
+    def kill_search(self, search_id: int) -> None:
+        """Director seam (§14): retire one search by verdict.  Same
+        freeze semantics as the portfolio kill — the engine's committed
+        history stays a prefix of its solo run.  The defense calls this
+        at a deterministic sample boundary (live detectors or a replayed
+        schedule), so live and replay runs kill at the same applied
+        message."""
+        e = self.searches[int(search_id)]
+        if e.status == RUNNING:
+            e.status = KILLED
 
     # -- introspection -------------------------------------------------------
 
@@ -325,6 +354,8 @@ class WorkServer:
                     self._host_lease.pop(l.host_id, None)
                     self._host_lapsed[l.host_id] = k
                     self.counters.leases_lapsed += 1
+                    if self._tracer is not None:
+                        self._tracer.on_lapse(l.search_id, l.wu_id, self.now)
                 else:
                     nxt = min(nxt, l.deadline)
             self._next_deadline = nxt
@@ -462,6 +493,9 @@ class WorkServer:
                 self._host_lease[host] = key
                 self._next_deadline = min(self._next_deadline, deadline)
                 self.counters.leases_issued += 1
+                if self._tracer is not None:
+                    self._tracer.on_issue(e.search_id, wu.wu_id, host, now,
+                                          wu.phase_id, wu.validates)
                 # the registry's on_issue cleared next_contact_at: this
                 # host's next contact now derives from the lease
                 return protocol.work_reply(e.search_id, wu.wu_id,
@@ -479,6 +513,7 @@ class WorkServer:
         search, wu_id = int(msg["search"]), int(msg["wu"])
         self._advance(now)
         key = (search, wu_id)
+        late = False
         lease = self.leases.pop(key, None)
         if lease is not None:
             if self._host_lease.get(lease.host_id) == key:
@@ -486,6 +521,7 @@ class WorkServer:
         else:
             lease = self.lapsed.pop(key, None)
             if lease is not None:
+                late = True
                 self.counters.late_returns += 1
                 if self._host_lapsed.get(lease.host_id) == key:
                     del self._host_lapsed[lease.host_id]
@@ -512,8 +548,23 @@ class WorkServer:
             self.registry.on_result(host, now,
                                     max(now - lease.issued_at, 1e-9))
             self.counters.dropped_results += 1
+            if self._tracer is not None:
+                self._tracer.on_settle(search, wu_id, now, "dropped", late)
         else:
+            tr = self._tracer
+            if tr is not None:
+                # read-only peeks BEFORE assimilation: stale is the §5
+                # phase compare the engine itself applies, commit shows as
+                # an iteration delta
+                was_stale = lease.wu.phase_id != e.fgdo.engine.phase_id
+                it0 = e.fgdo.engine.iteration
             e.fgdo.assimilate(lease.wu, float(msg["y"]), host, now)
+            if tr is not None:
+                tr.on_settle(
+                    search, wu_id, now,
+                    "stale" if was_stale
+                    else ("committed" if e.fgdo.engine.iteration > it0
+                          else "assimilated"), late)
             if e.fgdo.engine.done:
                 e.status = DONE
             if self.policy == "portfolio":
@@ -554,6 +605,18 @@ class WorkServer:
             # above; intake queue depth rides here when one is attached
             "intake": (None if self._intake_probe is None
                        else self._intake_probe()),
+            # §14: the obs plane's own configuration + retention depth —
+            # ring size and cadence are construction-path knobs now, so
+            # the reply is where an operator confirms what a server runs
+            "obs": (None if self._hub is None else {
+                "interval": self._hub.interval,
+                "ring": self._hub.ring,
+                "snapshots": self._hub.seq,
+                "tracer": (None if self._tracer is None
+                           else self._tracer.summary()),
+                "retention": (None if self._retention is None
+                              else self._retention.summary()),
+            }),
         }
 
     def _subscribe_stats(self, msg: dict) -> dict:
@@ -561,9 +624,22 @@ class WorkServer:
             return protocol.error_reply(
                 "no metrics hub attached (stats are opt-in server-side)")
         from repro.obs.metrics import STREAM_VERSION
-        snaps, cursor = self._hub.since(int(msg.get("since", -1)))
+        since = int(msg.get("since", -1))
+        snaps, cursor, dropped = self._hub.since(since)
+        if dropped and msg.get("from_store") and self._retention is not None:
+            # §14 backfill: serve ring-evicted history from the retention
+            # store's CURRENT epoch (same seq numbering as the live ring).
+            # The store may itself have compacted — whatever it still
+            # holds shrinks the reported gap, the rest stays ``dropped``.
+            oldest = int(snaps[0]["seq"]) if snaps else cursor + 1
+            backfill = [s for s in
+                        self._retention.snapshots(epoch=self._retention.epoch)
+                        if since < int(s["seq"]) < oldest]
+            if backfill:
+                snaps = backfill + snaps
+                dropped = max(0, dropped - len(backfill))
         return protocol.stats_reply(snaps, cursor, self._hub.interval,
-                                    STREAM_VERSION)
+                                    STREAM_VERSION, dropped)
 
     # -- hub probes (read-only views over existing state, §13) ---------------
 

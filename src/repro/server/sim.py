@@ -557,6 +557,8 @@ class ServerRunResult:
     obs: Optional[dict] = None        # metrics-hub summary, when observed
     subscriber: Optional[dict] = None  # live stats-poller summary
     defense: Optional[dict] = None    # anomaly summary + recorded schedule
+    retention: Optional[dict] = None  # §14 sink + store summary
+    trace: Optional[dict] = None      # §14 tracer counters
 
     @property
     def engines(self):
@@ -582,8 +584,14 @@ class ServerSubstrate:
                  concurrent: int = 0, chaos=None,
                  chaos_seed: Optional[int] = None,
                  obs: bool = False, stats_interval: float = 25.0,
+                 stats_ring: int = 256,
                  subscribe: bool = False, defense: bool = False,
                  defense_schedule: Optional[dict] = None,
+                 retain: bool = False, retain_dir: Optional[str] = None,
+                 retain_backend: str = "jsonl",
+                 retain_max_records: Optional[int] = 20_000,
+                 trace_rate: float = 0.0, trace_seed: int = 0,
+                 stall_window: int = 0, turnaround_drift: float = 0.0,
                  silence_at: Optional[float] = None,
                  silence_frac: float = 0.25):
         self.specs = [specs] if isinstance(specs, SearchSpec) else list(specs)
@@ -633,9 +641,26 @@ class ServerSubstrate:
         self.subscribe = bool(subscribe)
         self.defense = bool(defense)
         self.defense_schedule = defense_schedule
-        self.obs = bool(obs or subscribe or defense
-                        or defense_schedule is not None)
+        # §14 post-mortem plane: ``retain`` spills samples into a
+        # SnapshotStore under retain_dir (default: the ckpt_dir),
+        # ``trace_rate`` > 0 hooks a WorkUnitTracer onto the lease paths,
+        # and the window-defense knobs arm the §14 detectors (implying a
+        # live defense).  All of it implies the hub.
+        self.retain_dir = retain_dir
+        self.retain = bool(retain or retain_dir is not None)
+        self.retain_backend = str(retain_backend)
+        self.retain_max_records = retain_max_records
+        self.trace_rate = float(trace_rate)
+        self.trace_seed = int(trace_seed)
+        self.stall_window = int(stall_window)
+        self.turnaround_drift = float(turnaround_drift)
+        if self.stall_window or self.turnaround_drift:
+            self.defense = True
+        self.obs = bool(obs or subscribe or self.defense
+                        or defense_schedule is not None
+                        or self.retain or self.trace_rate > 0)
         self.stats_interval = float(stats_interval)
+        self.stats_ring = int(stats_ring)
         self.silence_at = silence_at
         self.silence_frac = float(silence_frac)
         if warm:
@@ -676,15 +701,46 @@ class ServerSubstrate:
         # recovery-compatibility argument
         hub = None
         fleet_defense = None
+        tracer = None
+        store = None
+        sink = None
         if self.obs:
-            from repro.obs import FleetDefense, MetricsHub
-            hub = MetricsHub(interval=self.stats_interval)
+            from repro.obs import (FleetDefense, MetricsHub, RetentionSink,
+                                   WorkUnitTracer, obs_store_path,
+                                   open_snapshot_store)
+            hub = MetricsHub(interval=self.stats_interval,
+                             ring=self.stats_ring)
             server.attach_hub(hub)
+            if self.trace_rate > 0:
+                tracer = WorkUnitTracer(sample_rate=self.trace_rate,
+                                        seed=self.trace_seed)
+                server.attach_tracer(tracer)
             if self.defense_schedule is not None:
+                # replay mode: recorded verdicts (incl. §14 stall kills)
+                # re-applied at recorded seqs; the server is the director
                 fleet_defense = FleetDefense.replay(server.registry, hub,
-                                                    self.defense_schedule)
+                                                    self.defense_schedule,
+                                                    director=server)
             elif self.defense:
-                fleet_defense = FleetDefense(server.registry, hub)
+                fleet_defense = FleetDefense(
+                    server.registry, hub, director=server,
+                    stall_window=self.stall_window,
+                    turnaround_drift=self.turnaround_drift)
+            if self.retain:
+                rdir = self.retain_dir or self.ckpt_dir
+                if rdir is None:
+                    raise ValueError("retain=True needs retain_dir or "
+                                     "ckpt_dir")
+                store = open_snapshot_store(
+                    obs_store_path(rdir, self.retain_backend),
+                    max_records=self.retain_max_records)
+                sink = RetentionSink(hub, store, tracer=tracer,
+                                     defense=fleet_defense)
+                server.attach_retention(store)
+                if mgr is not None:
+                    # flushed at every snapshot, closed with the manager —
+                    # the same §10 composition as the eval-cache store
+                    mgr.attach_store(store)
         if mgr is None:
             handler = server.handle
         else:
@@ -743,6 +799,7 @@ class ServerSubstrate:
             pool.resume_from(server.world_view())
         conn = None
         cache_status = None
+        retention_doc = None
         try:
             if self.concurrent:
                 pool.run(transport)       # workers open their own conns
@@ -759,10 +816,17 @@ class ServerSubstrate:
             if conn is not None:
                 conn.close()
             transport.stop()
+            if sink is not None:
+                sink.drain_remaining()    # spans settled after last sample
+                # summarized while the store can still answer (sqlite
+                # cannot be queried once the manager closes it)
+                retention_doc = sink.summary()
             if mgr is not None:
                 mgr.close()               # closes attached cache stores too
             elif self.cache is not None:
                 self.cache.store.flush()
+            if store is not None and mgr is None:
+                store.close()
         p99 = None
         if pool.request_wall:
             p99 = float(np.percentile(np.asarray(pool.request_wall),
@@ -792,7 +856,10 @@ class ServerSubstrate:
                                request_p99_ms=p99, obs=obs_doc,
                                subscriber=None if subscriber is None
                                else subscriber.summary(),
-                               defense=defense_doc)
+                               defense=defense_doc,
+                               retention=retention_doc,
+                               trace=None if tracer is None
+                               else tracer.summary())
 
 
 # -- the seeded smoke problem + CLI (dryrun's kill/restore subprocess) --------
@@ -878,6 +945,8 @@ def result_doc(res: ServerRunResult) -> dict:
         "obs": res.obs,
         "subscriber": res.subscriber,
         "defense": res.defense,
+        "retention": res.retention,
+        "trace": res.trace,
     }
 
 
@@ -934,6 +1003,26 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                          "extension; the trajectory is unchanged")
     ap.add_argument("--stats-interval", type=float, default=25.0,
                     help="virtual seconds between hub snapshots")
+    ap.add_argument("--stats-ring", type=int, default=256,
+                    help="hub snapshot ring size (construction-path knob)")
+    ap.add_argument("--retain", action="store_true",
+                    help="spill snapshots/spans/anomalies into the §14 "
+                         "retention store under --retain-dir or --ckpt-dir "
+                         "(implies --obs)")
+    ap.add_argument("--retain-dir", default=None,
+                    help="retention store directory (default: --ckpt-dir)")
+    ap.add_argument("--retain-backend", default="jsonl",
+                    choices=["jsonl", "sqlite"])
+    ap.add_argument("--trace-rate", type=float, default=0.0,
+                    help="fraction of workunits lifecycle-traced, keyed "
+                         "deterministically on workunit id (implies --obs)")
+    ap.add_argument("--stall-window", type=int, default=0,
+                    help="kill a search with no committed improvement for "
+                         "this many snapshots (implies --defense)")
+    ap.add_argument("--turnaround-drift", type=float, default=0.0,
+                    help="page a state cohort whose fast turnaround EWMA "
+                         "drifts this fraction above the slow baseline "
+                         "(implies --defense)")
     ap.add_argument("--subscribe", action="store_true",
                     help="run a live background subscribe_stats poller "
                          "over the transport (implies --obs)")
@@ -1004,8 +1093,14 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                           concurrent=args.concurrent, chaos=args.chaos,
                           chaos_seed=args.chaos_seed,
                           obs=args.obs, stats_interval=args.stats_interval,
+                          stats_ring=args.stats_ring,
                           subscribe=args.subscribe, defense=args.defense,
                           defense_schedule=defense_schedule,
+                          retain=args.retain, retain_dir=args.retain_dir,
+                          retain_backend=args.retain_backend,
+                          trace_rate=args.trace_rate,
+                          stall_window=args.stall_window,
+                          turnaround_drift=args.turnaround_drift,
                           silence_at=args.silence_at,
                           silence_frac=args.silence_frac)
     res = sub.run(resume=args.resume)

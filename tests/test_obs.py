@@ -92,15 +92,18 @@ class TestMetricsHub:
         for t in range(20):
             hub.sample(float(t))
         assert hub.seq == 20
-        snaps, cursor = hub.since(-1)
-        # fell off the ring: resume at the oldest retained snapshot
+        snaps, cursor, dropped = hub.since(-1)
+        # fell off the ring: resume at the oldest retained snapshot, and
+        # the reply SAYS how many were lost rather than silently skipping
         assert [s["seq"] for s in snaps] == list(range(12, 20))
         assert cursor == 19
-        again, cursor2 = hub.since(cursor)
-        assert again == [] and cursor2 == 19
+        assert dropped == 12
+        again, cursor2, d2 = hub.since(cursor)
+        assert again == [] and cursor2 == 19 and d2 == 0
         hub.sample(20.0)
-        fresh, cursor3 = hub.since(cursor2)
+        fresh, cursor3, d3 = hub.since(cursor2)
         assert [s["seq"] for s in fresh] == [20] and cursor3 == 20
+        assert d3 == 0
 
     def test_series_and_on_sample_callbacks(self):
         hub = MetricsHub(interval=1.0)
